@@ -1,0 +1,123 @@
+"""Beyond-paper studies:
+
+  (1) TPU-v5e projection — the same RAPID controller on an 8-chip v5e group
+      (the hardware-adaptation target; power model from
+      ``power_model.tpu_v5e_group``, chip constants from ``TPU_V5E``);
+  (2) controller ablations — cooldown and queue-threshold sweeps
+      (stability-vs-responsiveness trade-off the paper motivates
+      qualitatively in Section 3.3);
+  (3) rack-scale extrapolation — 16- and 32-GPU nodes (paper Section 7
+      future work: "the underlying algorithms can be applied to rack-scale
+      deployments").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import save_artifact
+from repro.configs import get_config
+from repro.core.controller import ControllerConfig, StaticPolicy, policy_4p4d
+from repro.core.costmodel import TPU_V5E
+from repro.core.power_model import tpu_v5e_group
+from repro.core.simulator import NodeSimulator, Workload
+
+
+def dyn(**kw):
+    return dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=True, **kw)
+
+
+def tpu_projection(fast=False):
+    """8-chip v5e group, 1240 W group budget (8 x 155 W provisioned of
+    200 W TBP-equivalent envelope). Smaller model (chip HBM is 16 GB)."""
+    cfg = get_config("qwen1.5-4b")
+    n = 200 if fast else 400
+    rows = []
+    print("TPU-v5e group (8 chips, 1240 W budget), qwen1.5-4b:")
+    for label, pol, ctrl in [
+        ("4P4D-155W (uniform)", StaticPolicy(4, 4, 155, 155), None),
+        ("4P-200W/4D-110W", StaticPolicy(4, 4, 200, 110), None),
+        ("RAPID dyn", StaticPolicy(4, 4, 155, 155),
+         dyn(decode_cap_max_w=160.0)),
+    ]:
+        wl = Workload.sonnet_phases(1.25, seed=5, n1=n, n2=n,
+                                    tpot1=0.060, tpot2=0.040)
+        sim = NodeSimulator(cfg, pol, node_budget_w=1240.0, gpu=TPU_V5E,
+                            power=tpu_v5e_group(), ctrl_cfg=ctrl,
+                            min_cap_w=110.0, max_cap_w=200.0)
+        s = sim.run(wl)
+        rows.append({"config": label, "slo": s.slo_attainment,
+                     "qps_per_kw": s.qps_per_kw})
+        print(f"  {label:24s} att={s.slo_attainment*100:5.1f}%  "
+              f"QPS/kW {s.qps_per_kw:5.2f}")
+    return rows
+
+
+def cooldown_ablation(fast=False):
+    """Paper Section 3.3: cooldown prevents oscillation; too long is sluggish."""
+    cfg = get_config("llama3.1-8b")
+    n = 150 if fast else 300
+    rows = []
+    print("\ncooldown ablation (GPU-move cooldown, DynGPU+DynPower, Sonnet):")
+    for cd in (0.5, 1.5, 3.0, 6.0, 12.0):
+        wl = Workload.sonnet_phases(6.5, seed=5, n1=n, n2=n)
+        sim = NodeSimulator(cfg, policy_4p4d(600), ctrl_cfg=dyn(cooldown_s=cd))
+        s = sim.run(wl)
+        moves = len(sim.ctrl.trace)
+        gpu_moves = sum(1 for _, k, _ in sim.ctrl.trace if k == "gpu")
+        rows.append({"cooldown_s": cd, "slo": s.slo_attainment,
+                     "moves": moves, "gpu_moves": gpu_moves})
+        print(f"  cooldown {cd:5.1f}s  att={s.slo_attainment*100:5.1f}%  "
+              f"moves={moves:3d} (gpu {gpu_moves})")
+    return rows
+
+
+def queue_threshold_ablation(fast=False):
+    cfg = get_config("llama3.1-8b")
+    n = 150 if fast else 300
+    rows = []
+    print("\nqueue-threshold ablation (early-warning trigger):")
+    for q in (1, 4, 16, 64):
+        wl = Workload.sonnet_phases(6.5, seed=5, n1=n, n2=n)
+        sim = NodeSimulator(cfg, policy_4p4d(600),
+                            ctrl_cfg=dyn(queue_threshold=q))
+        s = sim.run(wl)
+        rows.append({"threshold": q, "slo": s.slo_attainment})
+        print(f"  |Q_P| > {q:3d}  att={s.slo_attainment*100:5.1f}%")
+    return rows
+
+
+def rack_scale(fast=False):
+    """Scale node size at fixed per-GPU budget (600 W) and per-GPU rate."""
+    cfg = get_config("llama3.1-8b")
+    rows = []
+    print("\nrack-scale extrapolation (same per-GPU load, 0.8 QPS/GPU):")
+    for n_gpus in (8, 16, 32):
+        half = n_gpus // 2
+        n = (40 if fast else 75) * n_gpus
+        wl = Workload.sonnet_phases(0.8125 * n_gpus, seed=5, n1=n, n2=n)
+        pol = StaticPolicy(half, half, 600, 600)
+        sim = NodeSimulator(cfg, pol, node_budget_w=600.0 * n_gpus,
+                            ctrl_cfg=dyn())
+        s = sim.run(wl)
+        rows.append({"n_gpus": n_gpus, "slo": s.slo_attainment,
+                     "goodput_rps": s.goodput_rps})
+        print(f"  {n_gpus:2d} GPUs  att={s.slo_attainment*100:5.1f}%  "
+              f"goodput {s.goodput_rps:6.2f} req/s "
+              f"({s.goodput_rps/n_gpus:5.3f} /GPU)")
+    return rows
+
+
+def main(fast: bool = False):
+    out = {
+        "tpu_projection": tpu_projection(fast),
+        "cooldown": cooldown_ablation(fast),
+        "queue_threshold": queue_threshold_ablation(fast),
+        "rack_scale": rack_scale(fast),
+    }
+    save_artifact("beyond_ablations", out)
+    return out["cooldown"]
+
+
+if __name__ == "__main__":
+    main()

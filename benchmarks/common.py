@@ -1,0 +1,51 @@
+"""Shared helpers for the benchmark harness (one module per paper figure)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.configs import get_config
+from repro.core.controller import (ControllerConfig, StaticPolicy,
+                                   policy_4p4d, policy_5p3d,
+                                   policy_nonuniform)
+from repro.core.simulator import NodeSimulator, Workload
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+PAPER_MODEL = "llama31_8b"
+NODE_BUDGET_W = 4800.0
+
+
+def sim_run(policy, workload, *, budget=NODE_BUDGET_W, ctrl=None,
+            coalesced=False, cfg_name=PAPER_MODEL, seed=0):
+    cfg = get_config(cfg_name)
+    sim = NodeSimulator(cfg, policy, node_budget_w=budget, ctrl_cfg=ctrl,
+                        coalesced=coalesced, seed=seed)
+    summary = sim.run(workload)
+    return sim, summary
+
+
+def save_artifact(name: str, payload):
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def dyn_ctrl(tpot_slo=0.040, *, power=True, gpu=True, **kw) -> ControllerConfig:
+    return dataclasses.replace(
+        ControllerConfig(tpot_slo=tpot_slo), allow_power=power, allow_gpu=gpu,
+        **kw) if kw else dataclasses.replace(
+        ControllerConfig(tpot_slo=tpot_slo), allow_power=power, allow_gpu=gpu)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,95 @@
+"""Paper Figure 5(a)/(b): static SLO attainment vs request rate, LongBench,
+TTFT = 1 s, TPOT = 40 ms (a) / 25 ms (b). Also yields Figure 1's goodput
+curves (goodput = SLO-meeting requests/s) and the QPS/W comparisons
+(paper Section 5.1 headline numbers).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (NODE_BUDGET_W, Timer, save_artifact, sim_run)
+from repro.core.controller import (StaticPolicy, policy_4p4d, policy_5p3d,
+                                   policy_nonuniform)
+from repro.core.simulator import Workload
+
+QPS_PER_GPU = (0.75, 1.0, 1.25, 1.375, 1.5, 1.75)
+N_REQ = 1200
+
+CONFIGS = [
+    ("coalesced-750W", StaticPolicy(4, 4, 750, 750, "coalesced-750W"), True, 6000.0),
+    ("4P4D-750W", policy_4p4d(750), False, 6000.0),
+    ("4P4D-600W", policy_4p4d(600), False, NODE_BUDGET_W),
+    ("5P3D-600W", policy_5p3d(600), False, NODE_BUDGET_W),
+    ("4P-750W/4D-450W", policy_nonuniform(750, 450), False, NODE_BUDGET_W),
+    ("4P-675W/4D-525W", policy_nonuniform(675, 525), False, NODE_BUDGET_W),
+]
+
+
+def run(tpot_slo=0.040, n_req=N_REQ, rates=QPS_PER_GPU, seed=3):
+    rows = []
+    for qpg in rates:
+        for name, pol, coal, budget in CONFIGS:
+            wl = Workload.longbench_like(n_req, qps=qpg * 8, seed=seed,
+                                         tpot_slo=tpot_slo)
+            with Timer() as t:
+                _, s = sim_run(pol, wl, budget=budget, coalesced=coal)
+            rows.append({
+                "qps_per_gpu": qpg, "config": name,
+                "slo_attainment": s.slo_attainment,
+                "goodput_rps": s.goodput_rps,
+                "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+                "qps_per_kw": s.qps_per_kw,
+                "avg_provisioned_w": s.avg_provisioned_w,
+                "sim_wall_s": round(t.dt, 2),
+            })
+    return rows
+
+
+def knee(rows, config, threshold=0.8):
+    """Rate at which attainment crosses the threshold (linear interp)."""
+    pts = sorted((r["qps_per_gpu"], r["slo_attainment"]) for r in rows
+                 if r["config"] == config)
+    prev = None
+    for q, a in pts:
+        if a < threshold:
+            if prev is None:
+                return q * threshold / max(a, 1e-9)   # below at first point
+            q0, a0 = prev
+            return q0 + (q - q0) * (a0 - threshold) / max(a0 - a, 1e-9)
+        prev = (q, a)
+    return pts[-1][0] if pts else 0.0
+
+
+def main(fast: bool = False):
+    n = 500 if fast else N_REQ
+    rates = (1.0, 1.25, 1.5) if fast else QPS_PER_GPU
+    rows_a = run(0.040, n, rates)
+    print(f"{'config':>18s} | " + " | ".join(f"{q:5.3f}" for q in rates))
+    for name, *_ in CONFIGS:
+        vals = [r["slo_attainment"] for r in rows_a if r["config"] == name]
+        print(f"{name:>18s} | " + " | ".join(f"{v*100:5.1f}" for v in vals))
+    k_coal = knee(rows_a, "coalesced-750W")
+    k_750 = knee(rows_a, "4P4D-750W")
+    k_600 = knee(rows_a, "4P4D-600W")
+    k_nu = knee(rows_a, "4P-750W/4D-450W")
+    if k_coal > 0:
+        print(f"\n80% knees: coalesced-750={k_coal}  4P4D-750={k_750} "
+              f"(x{k_750/k_coal:.2f})  4P4D-600={k_600} "
+              f"(x{k_600/k_coal:.2f})  nonuniform={k_nu}")
+        # QPS/W at the knee (provisioned node power: GPUs = 60% of node)
+        qpw_nu = k_nu * 8 / (NODE_BUDGET_W / 0.6)
+        qpw_coal = k_coal * 8 / (6000.0 / 0.6)
+        print(f"QPS/W nonuniform vs coalesced-6000W: x{qpw_nu/qpw_coal:.2f}"
+              f" (paper: 1.7x)")
+    else:
+        print(f"\n80% knees: coalesced-750=<{rates[0]}  4P4D-750={k_750}  "
+              f"4P4D-600={k_600}  nonuniform={k_nu}")
+    rows_b = run(0.025, n, rates)
+    print("\nTPOT=25ms (Fig 5b):")
+    for name, *_ in CONFIGS:
+        vals = [r["slo_attainment"] for r in rows_b if r["config"] == name]
+        print(f"{name:>18s} | " + " | ".join(f"{v*100:5.1f}" for v in vals))
+    save_artifact("fig5_static_slo", {"tpot40": rows_a, "tpot25": rows_b})
+    return rows_a, rows_b
+
+
+if __name__ == "__main__":
+    main()

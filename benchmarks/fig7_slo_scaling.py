@@ -1,0 +1,42 @@
+"""Paper Figure 7: SLO-scale sweep — TTFT/TPOT SLOs scaled uniformly from
+2.0x (relaxed) to 0.5x (strict) at QPS/GPU in {1.25, 1.375, 1.5}.
+
+Validates: the non-uniform power configuration matches the 6000W
+4P4D-750W setup until the SLOs become highly restrictive.
+"""
+from __future__ import annotations
+
+from benchmarks.common import NODE_BUDGET_W, save_artifact, sim_run
+from repro.core.controller import policy_4p4d, policy_nonuniform
+from repro.core.simulator import Workload
+
+SCALES = (2.0, 1.5, 1.0, 0.75, 0.5)
+
+
+def main(fast: bool = False):
+    n = 400 if fast else 800
+    rates = (1.25,) if fast else (1.25, 1.375, 1.5)
+    rows = []
+    for qpg in rates:
+        print(f"\nQPS/GPU = {qpg}:  scale | 4P4D-750W | 4P4D-600W | 4P-750/4D-450")
+        for sc in SCALES:
+            vals = []
+            for pol, budget in [(policy_4p4d(750), 6000.0),
+                                (policy_4p4d(600), NODE_BUDGET_W),
+                                (policy_nonuniform(750, 450), NODE_BUDGET_W)]:
+                wl = Workload.longbench_like(
+                    n, qps=qpg * 8, seed=11,
+                    ttft_slo=1.0 * sc, tpot_slo=0.040 * sc)
+                _, s = sim_run(pol, wl, budget=budget)
+                vals.append(s.slo_attainment)
+            rows.append({"qps_per_gpu": qpg, "slo_scale": sc,
+                         "4P4D-750W": vals[0], "4P4D-600W": vals[1],
+                         "nonuniform": vals[2]})
+            print(f"  {sc:4.2f}x | {vals[0]*100:8.1f}% | {vals[1]*100:8.1f}% "
+                  f"| {vals[2]*100:8.1f}%")
+    save_artifact("fig7_slo_scaling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Figure 8 + 9: dynamic RAPID on the two-phase Sonnet workload
+(prefill-heavy 8k/128 then decode-heavy 500/500, TPOT SLO 40ms -> 20ms).
+
+Validates: DynGPU+DynPower best overall; DynPower alone converges to the
+static non-uniform optimum; up to ~2x SLO attainment over static at peak.
+Also dumps the Figure-9 time series (per-GPU caps + roles).
+"""
+from __future__ import annotations
+
+from benchmarks.common import dyn_ctrl, save_artifact, sim_run
+from repro.core.controller import (policy_4p4d, policy_5p3d,
+                                   policy_nonuniform)
+from repro.core.simulator import Workload
+
+QPS = 6.5          # ~0.8 QPS/GPU: the 8k-prompt phase saturates our
+                   # calibrated node near 1.0 (see EXPERIMENTS.md)
+
+
+def configs():
+    return [
+        ("4P4D-600W", policy_4p4d(600), None),
+        ("5P3D-600W", policy_5p3d(600), None),
+        ("4P-750W/4D-450W", policy_nonuniform(750, 450), None),
+        ("4P4D-DynPower", policy_4p4d(600), dyn_ctrl(gpu=False)),
+        ("DynGPU-600W", policy_4p4d(600), dyn_ctrl(power=False)),
+        ("DynGPU-DynPower", policy_4p4d(600), dyn_ctrl()),
+    ]
+
+
+def main(fast: bool = False):
+    n = 400 if fast else 600
+    rows = []
+    traces = {}
+    for name, pol, ctrl in configs():
+        wl = Workload.sonnet_phases(QPS, seed=5, n1=n, n2=n)
+        sim, s = sim_run(pol, wl, ctrl=ctrl)
+        rows.append({"config": name, "slo_attainment": s.slo_attainment,
+                     "goodput_rps": s.goodput_rps, "p90_ttft_s": s.p90_ttft,
+                     "p90_tpot_s": s.p90_tpot, "qps_per_kw": s.qps_per_kw,
+                     "moves": len(sim.ctrl.trace) if sim.ctrl else 0})
+        print(f"{name:18s} att={s.slo_attainment*100:5.1f}%  {s.row()}")
+        if ctrl is not None:
+            traces[name] = {
+                "caps": [(t, caps) for t, caps, _ in sim.trace_caps[::4]],
+                "roles": [(t, roles.count("prefill"), roles.count("decode"))
+                          for t, _, roles in sim.trace_caps[::4]],
+                "moves": sim.ctrl.trace,
+            }
+    att = {r["config"]: r["slo_attainment"] for r in rows}
+    best_static = max(att["4P4D-600W"], att["5P3D-600W"])
+    print(f"\nDynGPU-DynPower vs best plain static: "
+          f"x{att['DynGPU-DynPower']/max(best_static,1e-9):.2f} (paper: up to 2x)")
+    print(f"DynPower vs static non-uniform: {att['4P4D-DynPower']*100:.1f}% vs "
+          f"{att['4P-750W/4D-450W']*100:.1f}% (paper: converges to same)")
+    save_artifact("fig8_dynamic", {"rows": rows, "fig9_traces": traces})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

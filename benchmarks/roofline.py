@@ -1,0 +1,84 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+three-term roofline table (single-pod 16x16 mesh), with the dominant term,
+MODEL_FLOPS/HLO_FLOPs useful ratio, and an analytic HBM-traffic estimate
+(XLA:CPU's 'bytes accessed' over-counts; see EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.hlo import TPU_V5E
+from repro.configs import INPUT_SHAPES, get_config
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "dryrun")
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, n_chips: int = 256) -> float:
+    """Per-chip HBM traffic estimate: weights + optimizer + KV + activations."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    P = cfg.param_count()
+    Pa = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    D = cfg.d_model
+    if shape.kind == "train":
+        # fwd read + bwd read + grad write + opt read/write (bf16 m,v)
+        w = P * 2 * 3 + P * 2 * 4
+        acts = tokens * D * 2 * 2 * cfg.n_layers // 8   # remat: layer inputs
+        return (w + acts) / n_chips
+    n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+    kv_tok = 2 * n_attn * cfg.n_kv_heads * cfg.head_dim * 2
+    if shape.kind == "prefill":
+        return (P * 2 + tokens * kv_tok + tokens * D * 2 * 4) / n_chips
+    # decode: weights (active) + full KV read + tiny write
+    window = 8192 if shape.name == "long_500k" else shape.seq_len
+    kv = shape.global_batch * min(shape.seq_len, window) * kv_tok
+    return (Pa * 2 + kv) / n_chips
+
+
+def load_records(mesh="16x16", tag=""):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def main(fast: bool = False):
+    recs = load_records()
+    if not recs:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    print(f"{'arch':>18s} {'shape':>12s} | {'compute':>9s} {'memory*':>9s} "
+          f"{'coll':>9s} | dom       useful")
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        mem_an = analytic_hbm_bytes(r["arch"], r["shape"]) / TPU_V5E.hbm_bw
+        dom = max({"compute": rl["compute_s"], "memory": mem_an,
+                   "collective": rl["collective_s"]}.items(),
+                  key=lambda kv: kv[1])[0]
+        rows.append({**{k: r[k] for k in ("arch", "shape", "kind", "n_chips")},
+                     "compute_s": rl["compute_s"],
+                     "memory_s_analytic": mem_an,
+                     "memory_s_xla": rl["memory_s"],
+                     "collective_s": rl["collective_s"],
+                     "dominant": dom, "useful_ratio": rl["useful_ratio"],
+                     "collectives": r["collectives"]})
+        print(f"{r['arch']:>18s} {r['shape']:>12s} | {rl['compute_s']*1e3:8.2f}m "
+              f"{mem_an*1e3:8.2f}m {rl['collective_s']*1e3:8.2f}m | "
+              f"{dom:10s} {rl['useful_ratio']:6.2f}")
+    with open(os.path.join(DRYRUN_DIR, "..", "roofline_table.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

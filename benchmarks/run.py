@@ -1,0 +1,59 @@
+"""Benchmark driver: one module per paper figure/table + roofline + kernels.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig5,...]
+
+Prints ``name,seconds,derived`` CSV lines at the end.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "roofline", "kernels",
+          "beyond")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced request counts / rate grids")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    from benchmarks import (beyond_ablations, fig4_power_curves,
+                            fig5_static_slo, fig6_queueing, fig7_slo_scaling,
+                            fig8_dynamic, kernels_bench, roofline)
+    mods = {
+        "fig4": fig4_power_curves, "fig5": fig5_static_slo,
+        "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
+        "fig8": fig8_dynamic, "roofline": roofline, "kernels": kernels_bench,
+        "beyond": beyond_ablations,
+    }
+    results = []
+    failed = []
+    for name in SUITES:
+        if name not in only:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            out = mods[name].main(fast=args.fast)
+            n = len(out) if hasattr(out, "__len__") else 1
+            results.append((name, time.perf_counter() - t0, n))
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print("\nname,seconds,derived")
+    for name, dt, n in results:
+        print(f"{name},{dt:.1f},{n}")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

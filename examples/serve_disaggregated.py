@@ -1,0 +1,38 @@
+"""End-to-end driver: serve a small model with batched requests through the
+real-compute disaggregated engine — prefill workers fill actual KV caches,
+the ring buffer hands tensors to decode workers (continuous batching with
+per-slot positions), and the RAPID controller shifts power/roles live.
+
+Run:  PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.controller import ControllerConfig
+from repro.serving.engine import DisaggEngine
+
+
+def main():
+    cfg = get_config("qwen1.5-4b").reduced()
+    ctrl = ControllerConfig(ttft_slo=1.0, tpot_slo=0.04,
+                            allow_power=True, allow_gpu=True)
+    eng = DisaggEngine(cfg, n_prefill=2, n_decode=2, max_len=128,
+                       decode_slots=6, ctrl_cfg=ctrl)
+    rng = np.random.default_rng(0)
+    for i in range(40):
+        n_in = int(rng.integers(16, 64))
+        n_out = int(rng.integers(8, 24))
+        eng.submit(rng.integers(0, cfg.vocab_size, n_in).astype(np.int32),
+                   n_out, 0.0)
+    summary = eng.run()
+    print(f"finished {summary.n_finished}/{summary.n_total}  {summary.row()}")
+    print(f"controller moves: {len(eng.ctrl.trace)}")
+    print(f"final caps: {[round(c) for c in eng.pm.effective]} "
+          f"(budget {eng.pm.budget:.0f} W)")
+    sample = eng.finished[0]
+    print(f"sample request: {len(sample.tokens)} prompt tokens -> "
+          f"{sample.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""HLO-text analysis: collective-traffic accounting + roofline terms.
+
+The dry-run compiles a per-device SPMD module; ``cost_analysis`` gives
+per-device FLOPs/bytes, and the HLO text gives per-device collective
+operand/result sizes. Roofline terms are therefore per-chip seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\/ ]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective type (result-shape proxy).
+
+    ``-done`` ops are skipped so async start/done pairs count once.
+    """
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        if "-done" in m.group(0):
+            continue
+        out[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    out["_counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+
+
+TPU_V5E = Hardware()
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float                       # per-device HLO flops
+    bytes_accessed: float              # per-device HLO bytes
+    coll_bytes: float                  # per-device collective bytes
+    model_flops: float                 # analytic 6*N*D (global)
+    useful_ratio: float                # model_flops / (flops * chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], n_chips: int,
+                   model_flops: float, hw: Hardware = TPU_V5E) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = float(sum(v for k, v in coll.items() if not k.startswith("_")))
+    return Roofline(
+        compute_s=flops / hw.peak_flops,
+        memory_s=nbytes / hw.hbm_bw,
+        collective_s=cb / hw.ici_bw,
+        flops=flops, bytes_accessed=nbytes, coll_bytes=cb,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(flops * n_chips, 1.0),
+    )
+
+
+def train_model_flops(cfg, tokens: int) -> float:
+    """6*N*D with N = active params (fwd+bwd)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def step_model_flops(cfg, shape) -> float:
+    if shape.kind == "train":
+        return train_model_flops(cfg, shape.global_batch * shape.seq_len)
+    if shape.kind == "prefill":
+        return 2.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    return 2.0 * cfg.active_param_count() * shape.global_batch   # one token

@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    ARCH_ALIASES, ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig,
+    all_configs, get_config,
+)

@@ -1,0 +1,102 @@
+"""Analytical step-time model for disaggregated serving.
+
+Gives prefill / decode / KV-transfer times for a (model, hardware, power)
+triple. Prefill is compute-bound (scales with the power curve); decode is
+HBM-bound (scales weakly, saturating by ~600 W) — the asymmetry RAPID
+exploits. Constants for MI300X reproduce the paper's setting; TPU v5e
+constants are provided for the target hardware.
+
+Calibration sanity (Llama-3.1-8B, MI300X, 750 W): prefill 8k tokens
+~ 2*8e9*8192 / (1307e12 * 0.5) = 0.20 s; decode step at batch 32 reads
+16 GB weights + KV => ~4-6 ms/token. Both line up with the paper's SLO
+regime (TTFT 1 s, TPOT 25-40 ms).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core.power_model import PowerModel
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    peak_flops: float            # bf16, dense
+    hbm_bw: float                # bytes/s
+    hbm_bytes: float
+    link_bw: float               # intra-node per-pair (XGMI / ICI)
+    # serving-efficiency calibration (vLLM-style single-GPU TP=1 serving,
+    # includes scheduler/launch inefficiency; see EXPERIMENTS.md §Calibration)
+    # prefill MFU saturates with batch tokens: mfu(n) = mfu_max*n/(n+n_half),
+    # calibrated so mfu(4096) = 0.125 (matches the LongBench Fig-5 knees)
+    mfu_max: float = 0.42
+    mfu_n_half: float = 9667.0
+    mfu_prefill: float = 0.125          # reference value at n = 4096
+    mbu_decode: float = 0.34
+    overhead_prefill_s: float = 0.03   # per prefill batch
+    overhead_decode_s: float = 0.006   # per decode iteration
+    max_active_decode: int = 64        # vLLM max_num_seqs-style cap
+
+
+MI300X = GPUSpec("mi300x", peak_flops=1307e12, hbm_bw=5.3e12,
+                 hbm_bytes=192e9, link_bw=64e9)
+TPU_V5E = GPUSpec("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                  hbm_bytes=16e9, link_bw=50e9, mfu_prefill=0.15,
+                  mbu_decode=0.48)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    cfg: ModelConfig
+    gpu: GPUSpec
+    power: PowerModel
+    dtype_bytes: int = 2
+
+    # -- sizes ---------------------------------------------------------------
+    def kv_bytes_per_token(self) -> float:
+        c = self.cfg
+        n_attn = sum(1 for k in c.layer_kinds() if k == "attn")
+        return 2 * n_attn * c.n_kv_heads * c.head_dim * self.dtype_bytes
+
+    def weight_bytes(self) -> float:
+        return self.cfg.active_param_count() * self.dtype_bytes
+
+    # -- phase times at a given power cap -------------------------------------
+    def prefill_mfu(self, n_tokens: int) -> float:
+        # Flat serving MFU, batch-size independent: the scheduler co-batches
+        # small work (chunked prefill rides decode; small prompts batch
+        # together) and long prompts' extra matmul efficiency is offset by
+        # quadratic attention cost, which the 2*N*D flops term omits. This
+        # constant is the Fig-5 calibration anchor (see EXPERIMENTS.md).
+        del n_tokens
+        return self.gpu.mfu_prefill
+
+    def prefill_time(self, n_tokens: int, cap_w: float) -> float:
+        """Process n_tokens of prompt (possibly batched across requests)."""
+        flops = 2.0 * self.cfg.active_param_count() * n_tokens
+        base = flops / (self.gpu.peak_flops * self.prefill_mfu(n_tokens))
+        return (base / self.power.rel("prefill", cap_w)
+                + self.gpu.overhead_prefill_s)
+
+    def decode_step_time(self, batch: int, avg_ctx: int, cap_w: float) -> float:
+        """One decode iteration for a continuous batch."""
+        weight_traffic = self.weight_bytes()
+        kv_traffic = self.kv_bytes_per_token() * avg_ctx * batch
+        base = (weight_traffic + kv_traffic) / (self.gpu.hbm_bw *
+                                                self.gpu.mbu_decode)
+        # small compute floor (projections for `batch` tokens)
+        flops = 2.0 * self.cfg.active_param_count() * max(batch, 1)
+        base = max(base, flops / (self.gpu.peak_flops * self.gpu.mfu_prefill))
+        return (base / self.power.rel("decode", cap_w)
+                + self.gpu.overhead_decode_s)
+
+    def kv_transfer_time(self, n_tokens: int) -> float:
+        """Bulk KV-cache pull, prefill GPU -> decode GPU (counted in TPOT)."""
+        return self.kv_bytes_per_token() * n_tokens / self.gpu.link_bw
+
+    def max_decode_batch(self, avg_ctx: int) -> int:
+        """KV capacity / scheduler bound for a decode GPU."""
+        free = 0.85 * self.gpu.hbm_bytes - self.weight_bytes()
+        cap = int(free / (self.kv_bytes_per_token() * max(avg_ctx, 1)))
+        return max(1, min(cap, self.gpu.max_active_decode))

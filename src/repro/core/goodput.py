@@ -1,0 +1,86 @@
+"""Goodput / SLO-attainment metrics (DistServe-style, per RAPID Section 3.1).
+
+A request meets SLO iff TTFT <= ttft_slo AND mean TPOT <= tpot_slo.
+Goodput = rate of SLO-meeting requests. QPS/W uses average *provisioned*
+GPU power (the paper's accounting, Section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    arrival: float
+    input_tokens: int
+    output_tokens: int
+    prefill_done: Optional[float] = None    # first token time
+    finish: Optional[float] = None
+    ttft_slo: float = 1.0
+    tpot_slo: float = 0.040
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.prefill_done is None:
+            return None
+        return self.prefill_done - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.finish is None or self.prefill_done is None:
+            return None
+        n = max(self.output_tokens - 1, 1)
+        return (self.finish - self.prefill_done) / n
+
+    @property
+    def meets_slo(self) -> bool:
+        return (self.ttft is not None and self.tpot is not None
+                and self.ttft <= self.ttft_slo + 1e-9
+                and self.tpot <= self.tpot_slo + 1e-9)
+
+
+@dataclasses.dataclass
+class GoodputSummary:
+    n_total: int
+    n_finished: int
+    n_good: int
+    slo_attainment: float          # fraction of all requests meeting SLO
+    goodput_rps: float             # SLO-meeting requests per second
+    p50_ttft: float
+    p90_ttft: float
+    p50_tpot: float
+    p90_tpot: float
+    duration_s: float
+    avg_provisioned_w: float
+    qps_per_kw: float
+
+    def row(self) -> str:
+        return (f"good {self.slo_attainment*100:5.1f}%  goodput "
+                f"{self.goodput_rps:6.2f} req/s  TTFT p90 {self.p90_ttft:6.3f}s "
+                f"TPOT p90 {self.p90_tpot*1e3:6.1f}ms  "
+                f"QPS/kW {self.qps_per_kw:5.2f}")
+
+
+def summarize(records: List[RequestRecord], duration_s: float,
+              avg_provisioned_w: float) -> GoodputSummary:
+    fin = [r for r in records if r.finish is not None]
+    good = [r for r in fin if r.meets_slo]
+    ttfts = np.array([r.ttft for r in fin]) if fin else np.array([np.inf])
+    tpots = np.array([r.tpot for r in fin]) if fin else np.array([np.inf])
+    goodput = len(good) / duration_s if duration_s > 0 else 0.0
+    return GoodputSummary(
+        n_total=len(records), n_finished=len(fin), n_good=len(good),
+        slo_attainment=len(good) / max(len(records), 1),
+        goodput_rps=goodput,
+        p50_ttft=float(np.percentile(ttfts, 50)),
+        p90_ttft=float(np.percentile(ttfts, 90)),
+        p50_tpot=float(np.percentile(tpots, 50)),
+        p90_tpot=float(np.percentile(tpots, 90)),
+        duration_s=duration_s,
+        avg_provisioned_w=avg_provisioned_w,
+        qps_per_kw=1000.0 * goodput / max(avg_provisioned_w, 1.0),
+    )

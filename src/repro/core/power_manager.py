@@ -1,0 +1,162 @@
+"""Node power management: per-GPU caps under a fixed node budget, with the
+paper's source-before-sink ordering for dynamic power shifting (Section 2.2).
+
+``PowerBackend`` abstracts the enforcement mechanism (amd-smi on MI300X; a
+platform power API or ILP duty-cycling on TPU). ``SimulatedSMI`` reproduces
+the Fig 4c behaviour: a cap-lowering command takes ``enforce_latency_s`` to
+take effect; raises are immediate (raising a cap cannot violate the budget
+as long as the budget accounting uses commanded caps for raises and
+*previous* caps for in-flight lowers — which is exactly what the paper's
+"lower sources first, then raise sinks" rule guarantees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+MIN_CAP_W = 400.0
+MAX_CAP_W = 750.0
+
+
+@dataclasses.dataclass
+class CapChange:
+    gpu: int
+    watts: float
+    effective_at: float
+
+
+class PowerBackend:
+    """Interface: schedule a cap change, report when it is in force."""
+
+    def set_cap(self, now: float, gpu: int, watts: float) -> CapChange:
+        raise NotImplementedError
+
+
+class SimulatedSMI(PowerBackend):
+    def __init__(self, enforce_latency_s: float = 0.3):
+        self.enforce_latency_s = enforce_latency_s
+
+    def set_cap(self, now: float, gpu: int, watts: float) -> CapChange:
+        return CapChange(gpu, watts, now + self.enforce_latency_s)
+
+
+class PowerManager:
+    """Tracks commanded + effective caps for every GPU; enforces the node
+    budget invariant sum(max(commanded, effective)) <= budget at all times."""
+
+    def __init__(self, n_gpus: int, node_budget_w: float,
+                 backend: Optional[PowerBackend] = None,
+                 min_cap: float = MIN_CAP_W, max_cap: float = MAX_CAP_W,
+                 initial_caps: Optional[List[float]] = None):
+        self.n = n_gpus
+        self.budget = node_budget_w
+        self.backend = backend or SimulatedSMI()
+        self.min_cap, self.max_cap = min_cap, max_cap
+        caps = initial_caps or [node_budget_w / n_gpus] * n_gpus
+        caps = [min(max(c, min_cap), max_cap) for c in caps]
+        assert sum(caps) <= node_budget_w + 1e-6
+        self.commanded: List[float] = list(caps)
+        self.effective: List[float] = list(caps)
+        self.pending: List[CapChange] = []
+        self.history: List[tuple] = []     # (t, gpu, watts)
+
+    # -- bookkeeping -----------------------------------------------------------
+    def _worst_case(self) -> float:
+        """Budget-relevant power: for lowering commands still in flight the
+        GPU may still draw its old (higher) cap."""
+        return sum(max(c, e) for c, e in zip(self.commanded, self.effective))
+
+    def tick(self, now: float):
+        """Apply pending cap changes that have become effective."""
+        still = []
+        for ch in self.pending:
+            if ch.effective_at <= now:
+                self.effective[ch.gpu] = ch.watts
+            else:
+                still.append(ch)
+        self.pending = still
+
+    def caps(self) -> List[float]:
+        return list(self.effective)
+
+    # -- commands --------------------------------------------------------------
+    def set_cap(self, now: float, gpu: int, watts: float) -> float:
+        """Command one cap. Returns when it takes effect. Raising a cap is
+        refused (ValueError) if it would break the worst-case budget."""
+        watts = min(max(watts, self.min_cap), self.max_cap)
+        old = self.commanded[gpu]
+        if watts > old:
+            # clamp the raise to the worst-case budget headroom: concurrent
+            # in-flight lowers still count at their old caps, so a raise can
+            # never overshoot the node budget (source-before-sink invariant)
+            mine = max(old, self.effective[gpu])
+            headroom = self.budget - (self._worst_case() - mine)
+            watts = max(min(watts, headroom), self.min_cap)
+            if watts <= old + 1e-9:
+                return now
+            # raises take effect immediately (no draw above demand anyway)
+            self.commanded[gpu] = watts
+            self.effective[gpu] = watts
+            self.history.append((now, gpu, watts))
+            return now
+        ch = self.backend.set_cap(now, gpu, watts)
+        self.commanded[gpu] = watts
+        self.pending.append(ch)
+        self.history.append((now, gpu, watts))
+        return ch.effective_at
+
+    def shift(self, now: float, src: List[int], dst: List[int],
+              watts_per_gpu: float):
+        """Move watts from each src GPU to dst GPUs (source-before-sink).
+        Lowers the sources now; returns (t_ready, freed_watts). The caller
+        schedules ``apply_raise(t_ready, dst, freed_watts, dst_max)`` —
+        the payload travels with the event so concurrent shifts and uniform
+        redistributions cannot clobber each other."""
+        total = 0.0
+        t_ready = now
+        for g in src:
+            target = max(self.commanded[g] - watts_per_gpu, self.min_cap)
+            moved = self.commanded[g] - target
+            if moved <= 0:
+                continue
+            t_ready = max(t_ready, self.set_cap(now, g, target))
+            total += moved
+        return t_ready, total
+
+    def apply_raise(self, now: float, dst: List[int], total: float,
+                    dst_max: Optional[float] = None):
+        """Second phase of ``shift``: distribute the freed watts to sinks."""
+        if not dst or total <= 0:
+            return
+        self.tick(now)
+        per = total / len(dst)
+        cap = min(self.max_cap, dst_max) if dst_max else self.max_cap
+        for g in dst:
+            target = min(self.commanded[g] + per, cap)
+            if target > self.commanded[g]:
+                self.set_cap(now, g, target)
+
+    def distribute_uniform(self, now: float, gpus: Optional[List[int]] = None):
+        """Paper Algorithm 1 line 14: DISTRIBUTEUNIFORMPOWER(AllGPUs).
+        Lower-first then raise; returns (t_ready, gpus, per)."""
+        gpus = list(range(self.n)) if gpus is None else gpus
+        per = min(self.budget / self.n, self.max_cap)
+        t_ready = now
+        for g in gpus:
+            if self.commanded[g] > per:
+                t_ready = max(t_ready, self.set_cap(now, g, per))
+        return t_ready, gpus, per
+
+    def apply_uniform(self, now: float, gpus: List[int], per: float):
+        self.tick(now)
+        for g in gpus:
+            if self.commanded[g] < per:
+                self.set_cap(now, g, per)
+
+    def at_limits(self, src: List[int], dst: List[int],
+                  dst_max: Optional[float] = None) -> bool:
+        """POWERLIMITSREACHED: no more watts can move src -> dst."""
+        dst_cap = min(self.max_cap, dst_max) if dst_max else self.max_cap
+        src_done = all(self.commanded[g] <= self.min_cap + 1e-6 for g in src)
+        dst_done = all(self.commanded[g] >= dst_cap - 1e-6 for g in dst)
+        return src_done or dst_done or not src or not dst

@@ -1,0 +1,459 @@
+"""Discrete-event simulator of a power-capped disaggregated inference node.
+
+Reproduces the paper's experimental setting on CPU: an 8-GPU MI300X node
+(4800 W budget), vLLM-style central router + per-GPU workers, ring-buffer KV
+handoff (32 slots, pull-based), continuous decode batching, chunked-prefill
+coalesced baseline, and the RAPID controller (static / DynPower / DynGPU /
+both). Step durations come from ``core.costmodel``; power from
+``core.power_model``; the control algorithm is the *same code* that drives
+the real-compute engine in ``serving/``.
+
+Request lifecycle:
+  arrival -> prefill queue -> prefill batch (token budget) -> ring slot ->
+  KV transfer (counted against TPOT, paper Section 4) -> decode GPU
+  (continuous batching) -> finish.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import (ControllerConfig, Decision, Observation,
+                                   RapidController, StaticPolicy)
+from repro.core.costmodel import MI300X, CostModel, GPUSpec
+from repro.core.goodput import GoodputSummary, RequestRecord, summarize
+from repro.core.power_manager import PowerManager
+from repro.core.power_model import PowerModel, mi300x
+
+RING_SLOTS = 32
+MAX_PREFILL_BATCH_TOKENS = 4096
+MAX_PREFILL_BATCH_REQS = 8
+PREFILL_CHUNK = 512
+CHUNK_PENALTY = 1.0               # chunked-prefill efficiency loss (Sarathi)              # coalesced chunked-prefill chunk size
+METRIC_WINDOW_S = 5.0
+
+
+@dataclasses.dataclass
+class SimRequest:
+    rec: RequestRecord
+    tokens_out: int = 0
+    decode_gpu: Optional[int] = None
+
+    @property
+    def rid(self):
+        return self.rec.rid
+
+
+@dataclasses.dataclass
+class GPU:
+    gid: int
+    role: str                      # "prefill" | "decode" | "mixed"
+    busy: bool = False
+    draining: bool = False
+    active: List[SimRequest] = dataclasses.field(default_factory=list)
+    pending_join: List[SimRequest] = dataclasses.field(default_factory=list)
+    iterating: bool = False
+    # mixed-mode prefill progress: (req, tokens_done)
+    mixed_prefill: deque = dataclasses.field(default_factory=deque)
+
+
+class Workload:
+    """List of requests with arrival times."""
+
+    def __init__(self, entries, name=""):
+        # entries: (arrival, in_tokens, out_tokens, ttft_slo, tpot_slo)
+        self.entries = sorted(entries, key=lambda e: e[0])
+        self.name = name
+
+    @staticmethod
+    def poisson_arrivals(n: int, qps: float, rng) -> np.ndarray:
+        gaps = rng.exponential(1.0 / qps, n)
+        return np.cumsum(gaps)
+
+    @classmethod
+    def longbench_like(cls, n: int, qps: float, seed=0, max_input=8192,
+                       ttft_slo=1.0, tpot_slo=0.040):
+        """Long-tailed input lengths up to 8k (paper Section 4)."""
+        rng = np.random.default_rng(seed)
+        t = cls.poisson_arrivals(n, qps, rng)
+        lens = np.minimum((rng.lognormal(7.6, 0.9, n)).astype(int) + 64,
+                          max_input)
+        outs = rng.integers(384, 896, n)
+        return cls([(float(t[i]), int(lens[i]), int(outs[i]), ttft_slo,
+                     tpot_slo) for i in range(n)], name="longbench")
+
+    @classmethod
+    def sonnet_phases(cls, qps: float, seed=0, n1=1000, n2=1000,
+                      ttft_slo=1.0, tpot1=0.040, tpot2=0.020):
+        """Paper Section 5.2: prefill-heavy phase (8k in / 128 out, 40 ms)
+        then decode-heavy phase (500 in / 500 out, 20 ms)."""
+        rng = np.random.default_rng(seed)
+        t1 = cls.poisson_arrivals(n1, qps, rng)
+        t2 = cls.poisson_arrivals(n2, qps, rng) + t1[-1]
+        e = [(float(t), 8192, 128, ttft_slo, tpot1) for t in t1]
+        e += [(float(t), 500, 500, ttft_slo, tpot2) for t in t2]
+        return cls(e, name="sonnet")
+
+    @classmethod
+    def uniform(cls, n: int, qps: float, in_tokens: int, out_tokens: int,
+                seed=0, ttft_slo=1.0, tpot_slo=0.040):
+        rng = np.random.default_rng(seed)
+        t = cls.poisson_arrivals(n, qps, rng)
+        return cls([(float(tt), in_tokens, out_tokens, ttft_slo, tpot_slo)
+                    for tt in t], name="uniform")
+
+
+class NodeSimulator:
+    def __init__(self, cfg: ModelConfig, policy: StaticPolicy,
+                 node_budget_w: float = 4800.0,
+                 gpu: GPUSpec = MI300X, power: Optional[PowerModel] = None,
+                 ctrl_cfg: Optional[ControllerConfig] = None,
+                 coalesced: bool = False, seed: int = 0,
+                 min_cap_w: float = 400.0, max_cap_w: float = 750.0):
+        self.cost = CostModel(cfg, gpu, power or mi300x())
+        self.n_gpus = policy.n_prefill + policy.n_decode
+        caps = policy.caps()
+        assert sum(caps) <= node_budget_w + 1e-6, (caps, node_budget_w)
+        self.pm = PowerManager(self.n_gpus, node_budget_w, initial_caps=caps,
+                               min_cap=min_cap_w, max_cap=max_cap_w)
+        self.coalesced = coalesced
+        if coalesced:
+            self.gpus = [GPU(i, "mixed") for i in range(self.n_gpus)]
+        else:
+            self.gpus = ([GPU(i, "prefill") for i in range(policy.n_prefill)] +
+                         [GPU(policy.n_prefill + i, "decode")
+                          for i in range(policy.n_decode)])
+        self.ctrl = (RapidController(ctrl_cfg, self.pm) if ctrl_cfg else None)
+        self.ctrl_cfg = ctrl_cfg
+        self.rng = np.random.default_rng(seed)
+
+        self.heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.q_prefill: deque = deque()
+        self.ring_free = RING_SLOTS
+        self.ring_wait: deque = deque()
+        self.records: List[RequestRecord] = []
+        self.recent_ttft: deque = deque()       # (t, value)
+        self.recent_tpot: deque = deque()       # decode iteration times
+        self.recent_req_tpot: deque = deque()   # completed-request TPOT
+        self.now = 0.0
+        self.power_samples: List[tuple] = []    # (t, provisioned, roles)
+        self.trace_caps: List[tuple] = []       # (t, caps per gpu, roles)
+        self.mixed_rr = 0
+
+    # ---------------- event plumbing ----------------
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
+
+    # ---------------- role lists ----------------
+    def prefill_gpus(self) -> List[int]:
+        return [g.gid for g in self.gpus if g.role == "prefill"
+                and not g.draining]
+
+    def decode_gpus(self) -> List[int]:
+        return [g.gid for g in self.gpus if g.role == "decode"
+                and not g.draining]
+
+    # ---------------- prefill ----------------
+    def _kick_prefill(self, gpu: GPU):
+        if gpu.busy or gpu.draining or not self.q_prefill:
+            return
+        batch, tokens = [], 0
+        while (self.q_prefill and len(batch) < MAX_PREFILL_BATCH_REQS and
+               tokens < MAX_PREFILL_BATCH_TOKENS):
+            nxt = self.q_prefill[0]
+            if batch and tokens + nxt.rec.input_tokens > MAX_PREFILL_BATCH_TOKENS:
+                break
+            self.q_prefill.popleft()
+            batch.append(nxt)
+            tokens += nxt.rec.input_tokens
+        if not batch:
+            return
+        gpu.busy = True
+        cap = self.pm.effective[gpu.gid]
+        dt = self.cost.prefill_time(tokens, cap)
+        self._push(self.now + dt, "prefill_done", (gpu.gid, batch))
+
+    def _on_prefill_done(self, gid: int, batch: List[SimRequest]):
+        gpu = self.gpus[gid]
+        gpu.busy = False
+        for req in batch:
+            req.rec.prefill_done = self.now
+            self.recent_ttft.append((self.now, req.rec.ttft))
+            self._ring_enqueue(req)
+        if gpu.draining:
+            self._push(self.now + self._drain_s(), "drain_done", gid)
+        else:
+            self._kick_prefill(gpu)
+
+    # ---------------- KV ring buffer ----------------
+    def _ring_enqueue(self, req: SimRequest):
+        self.ring_wait.append(req)
+        self._ring_pump()
+
+    def _ring_pump(self):
+        while self.ring_free > 0 and self.ring_wait:
+            req = self.ring_wait.popleft()
+            self.ring_free -= 1
+            dt = self.cost.kv_transfer_time(req.rec.input_tokens)
+            self._push(self.now + dt, "transfer_done", req)
+
+    def _on_transfer_done(self, req: SimRequest):
+        dgpus = self.decode_gpus() or [g.gid for g in self.gpus
+                                       if g.role == "decode"]
+        load = lambda i: len(self.gpus[i].active) + len(self.gpus[i].pending_join)
+        cap = self.cost.max_decode_batch(int(self._global_avg_ctx()))
+        if not dgpus or min((load(i) for i in dgpus), default=cap) >= cap:
+            # decode pool saturated: request stays in its ring slot
+            # (backpressure on prefill, paper Section 3.3)
+            self._push(self.now + 0.02, "transfer_done", req)
+            return
+        self.ring_free += 1
+        self._ring_pump()
+        gid = min(dgpus, key=load)
+        req.decode_gpu = gid
+        gpu = self.gpus[gid]
+        gpu.pending_join.append(req)
+        self._kick_decode(gpu)
+
+    def _global_avg_ctx(self) -> float:
+        ctxs = [r.rec.input_tokens + r.tokens_out
+                for g in self.gpus for r in g.active]
+        return float(np.mean(ctxs)) if ctxs else 1000.0
+
+    # ---------------- decode ----------------
+    def _avg_ctx(self, gpu: GPU) -> float:
+        if not gpu.active:
+            return 1.0
+        return float(np.mean([r.rec.input_tokens + r.tokens_out
+                              for r in gpu.active]))
+
+    def _kick_decode(self, gpu: GPU):
+        if gpu.iterating:
+            return
+        gpu.active.extend(gpu.pending_join)
+        gpu.pending_join.clear()
+        if not gpu.active:
+            return
+        gpu.iterating = True
+        cap = self.pm.effective[gpu.gid]
+        dt = self.cost.decode_step_time(len(gpu.active), self._avg_ctx(gpu), cap)
+        self._push(self.now + dt, "decode_iter", (gpu.gid, dt))
+
+    def _on_decode_iter(self, gid: int, dt: float):
+        gpu = self.gpus[gid]
+        gpu.iterating = False
+        self.recent_tpot.append((self.now, dt))
+        done = []
+        for r in gpu.active:
+            r.tokens_out += 1
+            if r.tokens_out >= r.rec.output_tokens:
+                r.rec.finish = self.now
+                self.recent_req_tpot.append((self.now, r.rec.tpot))
+                done.append(r)
+        gpu.active = [r for r in gpu.active if r.rec.finish is None]
+        if gpu.draining and not gpu.active:
+            self._push(self.now + self._drain_s(), "drain_done", gid)
+            return
+        self._kick_decode(gpu)
+
+    # ---------------- coalesced (chunked prefill, Sarathi-style) ----------
+    def _kick_mixed(self, gpu: GPU):
+        if gpu.iterating:
+            return
+        gpu.active.extend(gpu.pending_join)
+        gpu.pending_join.clear()
+        if not gpu.mixed_prefill and not gpu.active:
+            return
+        gpu.iterating = True
+        cap = self.pm.effective[gpu.gid]
+        if gpu.mixed_prefill:
+            req, done_toks = gpu.mixed_prefill[0]
+            chunk = min(PREFILL_CHUNK, req.rec.input_tokens - done_toks)
+            dt = self.cost.prefill_time(chunk, cap) * CHUNK_PENALTY
+            if gpu.active:   # decode KV traffic rides the fused iteration
+                dt += (self.cost.kv_bytes_per_token() * self._avg_ctx(gpu) *
+                       len(gpu.active)) / (self.cost.gpu.hbm_bw *
+                                           self.cost.gpu.mbu_decode)
+
+            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, chunk))
+        else:
+            dt = self.cost.decode_step_time(len(gpu.active),
+                                            self._avg_ctx(gpu), cap)
+            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, 0))
+
+    def _on_mixed_iter(self, gid: int, dt: float, chunk: int):
+        gpu = self.gpus[gid]
+        gpu.iterating = False
+        if chunk and gpu.mixed_prefill:
+            req, done_toks = gpu.mixed_prefill.popleft()
+            done_toks += chunk
+            if done_toks >= req.rec.input_tokens:
+                req.rec.prefill_done = self.now
+                self.recent_ttft.append((self.now, req.rec.ttft))
+                gpu.pending_join.append(req)   # same GPU continues decoding
+            else:
+                gpu.mixed_prefill.appendleft((req, done_toks))
+        if gpu.active:
+            self.recent_tpot.append((self.now, dt))
+            done = []
+            for r in gpu.active:
+                r.tokens_out += 1
+                if r.tokens_out >= r.rec.output_tokens:
+                    r.rec.finish = self.now
+            gpu.active = [r for r in gpu.active if r.rec.finish is None]
+        self._kick_mixed(gpu)
+
+    # ---------------- controller ----------------
+    def _window_p90(self, dq: deque) -> float:
+        while dq and dq[0][0] < self.now - METRIC_WINDOW_S:
+            dq.popleft()
+        if not dq:
+            return 0.0
+        return float(np.percentile([v for _, v in dq], 90))
+
+    def _queue_ttft_estimate(self) -> float:
+        """Pessimistic TTFT signal from queue head age (early warning)."""
+        if not self.q_prefill:
+            return 0.0
+        head = self.q_prefill[0]
+        return self.now - head.rec.arrival
+
+    def _drain_s(self) -> float:
+        return (self.ctrl_cfg.gpu_move_drain_s if self.ctrl_cfg else 3.0)
+
+    def _on_ctrl(self):
+        self.pm.tick(self.now)
+        self.trace_caps.append((self.now, list(self.pm.effective),
+                                [g.role for g in self.gpus]))
+        self.power_samples.append((self.now, sum(self.pm.effective)))
+        if self.ctrl is not None and not self.coalesced:
+            obs = Observation(
+                now=self.now,
+                ttft_p90=max(self._window_p90(self.recent_ttft),
+                             self._queue_ttft_estimate()),
+                tpot_p90=max(self._window_p90(self.recent_tpot),
+                             self._window_p90(self.recent_req_tpot)),
+                q_prefill=len(self.q_prefill),
+                q_decode=(sum(len(g.pending_join) for g in self.gpus)
+                          + len(self.ring_wait)),
+            )
+            pre, dec = self.prefill_gpus(), self.decode_gpus()
+            d = self.ctrl.tick(obs, pre, dec)
+            if d.kind == "power":
+                src, dst = (dec, pre) if d.direction == "d2p" else (pre, dec)
+                dst_max = (self.ctrl_cfg.decode_cap_max_w
+                           if d.direction == "p2d" else self.pm.max_cap)
+                # lower each source by one step; never below min
+                t_ready, freed = self.pm.shift(self.now, src, dst,
+                                               self.ctrl_cfg.power_step_w)
+                # sink raise after sources enforced; payload rides the event
+                self._push(t_ready, "power_ready", (list(dst), freed, dst_max))
+            elif d.kind == "gpu":
+                self._start_role_switch(d.direction)
+        if self.heap:
+            self._push(self.now + (self.ctrl_cfg.min_time_s
+                                   if self.ctrl_cfg else 0.25), "ctrl")
+
+    def _start_role_switch(self, direction: str):
+        if direction == "d2p":
+            cands = self.decode_gpus()
+            if len(cands) <= (self.ctrl_cfg.min_decode_gpus
+                              if self.ctrl_cfg else 1):
+                return
+            gid = min(cands, key=lambda i: len(self.gpus[i].active))
+            gpu = self.gpus[gid]
+            gpu.draining = True
+            # migrate its active requests to remaining decode GPUs
+            others = [i for i in self.decode_gpus() if i != gid]
+            if others and gpu.active:
+                for r in gpu.active:
+                    tgt = min(others, key=lambda i: len(self.gpus[i].active))
+                    r.decode_gpu = tgt
+                    self.gpus[tgt].pending_join.append(r)
+                gpu.active = []
+                for i in others:
+                    self._kick_decode(self.gpus[i])
+            self._push(self.now + self._drain_s(), "drain_done", gid)
+        else:
+            cands = self.prefill_gpus()
+            if len(cands) <= (self.ctrl_cfg.min_prefill_gpus
+                              if self.ctrl_cfg else 1):
+                return
+            gid = min(cands, key=lambda i: self.gpus[i].busy)
+            gpu = self.gpus[gid]
+            gpu.draining = True
+            if not gpu.busy:
+                self._push(self.now + self._drain_s(), "drain_done", gid)
+            # else drain scheduled on prefill completion
+
+    def _on_drain_done(self, gid: int):
+        gpu = self.gpus[gid]
+        if not gpu.draining:      # duplicate drain event (already flipped)
+            return
+        gpu.draining = False
+        gpu.role = "prefill" if gpu.role == "decode" else "decode"
+        # Algorithm 1 line 14: uniform power after a GPU move
+        t_ready, gpus, per = self.pm.distribute_uniform(self.now)
+        self._push(t_ready, "uniform_ready", (gpus, per))
+        if gpu.role == "prefill":
+            self._kick_prefill(gpu)
+        else:
+            self._kick_decode(gpu)
+
+    # ---------------- main loop ----------------
+    def run(self, workload: Workload, horizon_s: float = 1e5) -> GoodputSummary:
+        for i, (t, it, ot, ts, ps) in enumerate(workload.entries):
+            rec = RequestRecord(i, t, it, ot, ttft_slo=ts, tpot_slo=ps)
+            self.records.append(rec)
+            self._push(t, "arrival", SimRequest(rec))
+        self._push(0.0, "ctrl")
+        n_left = len(self.records)
+        while self.heap and n_left > 0:
+            t, _, kind, payload = heapq.heappop(self.heap)
+            if t > horizon_s:
+                break
+            self.now = t
+            self.pm.tick(t)
+            if kind == "arrival":
+                if self.coalesced:
+                    gpu = self.gpus[self.mixed_rr % self.n_gpus]
+                    self.mixed_rr += 1
+                    gpu.mixed_prefill.append((payload, 0))
+                    self._kick_mixed(gpu)
+                else:
+                    self.q_prefill.append(payload)
+                    for gid in self.prefill_gpus():
+                        self._kick_prefill(self.gpus[gid])
+            elif kind == "prefill_done":
+                self._on_prefill_done(*payload)
+            elif kind == "transfer_done":
+                self._on_transfer_done(payload)
+            elif kind == "decode_iter":
+                self._on_decode_iter(*payload)
+            elif kind == "mixed_iter":
+                self._on_mixed_iter(*payload)
+            elif kind == "ctrl":
+                self._on_ctrl()
+            elif kind == "power_ready":
+                dst, freed, dst_max = payload
+                self.pm.apply_raise(self.now, dst, freed, dst_max)
+            elif kind == "uniform_ready":
+                gpus, per = payload
+                self.pm.apply_uniform(self.now, gpus, per)
+            elif kind == "drain_done":
+                self._on_drain_done(payload)
+            n_left = sum(1 for r in self.records if r.finish is None)
+        duration = max((r.finish or self.now) for r in self.records) if \
+            self.records else self.now
+        if self.power_samples:
+            avg_w = float(np.mean([w for _, w in self.power_samples]))
+        else:
+            avg_w = sum(self.pm.effective)
+        return summarize(self.records, duration, avg_w)

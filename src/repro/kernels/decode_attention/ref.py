@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token (decode) GQA attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: (B, Hq, hd); caches: (B, S, K, hd); slots > pos are masked.
+    Returns (B, Hq, hd); math in fp32."""
+    B, Hq, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // K
+    qf = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qf, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

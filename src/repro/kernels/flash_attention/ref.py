@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for blocked causal/windowed flash attention."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q,k,v: (B, S, H, hd) (same H: GQA expansion is done by the caller).
+    Returns (B, S, H, hd) in q.dtype; math in fp32."""
+    B, S, H, hd = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bshd,bthd->bhst", qf, kf) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Exact sequential mLSTM recurrence — oracle for the chunkwise kernel.
+
+State per (batch, head): C (hd, hd), n (hd,), m scalar (log-space
+stabilizer). Step t:
+    m' = max(log_f_t + m, log_i_t)
+    C' = exp(log_f_t + m - m') C + exp(log_i_t - m') k_t v_t^T
+    n' = exp(log_f_t + m - m') n + exp(log_i_t - m') k_t
+    h_t = C'^T q_t / max(|n' . q_t|, exp(-m'))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_i, log_f, C0, n0, m0):
+    """q,k,v: (B, S, hd) fp32 (single head; vmap for multi-head);
+    log_i, log_f: (B, S). Returns (h (B,S,hd), (C, n, m))."""
+
+    def step(state, xs):
+        C, n, m = state
+        qt, kt, vt, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)
+        f_s = jnp.exp(lf + m - m_new)[:, None]
+        i_s = jnp.exp(li - m_new)[:, None]
+        C = C * f_s[..., None] + i_s[..., None] * \
+            jnp.einsum("bd,be->bde", kt, vt)
+        n = n * f_s + i_s * kt
+        num = jnp.einsum("bd,bde->be", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bd,bd->b", qt, n)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[:, None]
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (C, n, m)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, x, h0):
+    """h_t = exp(log_a_t) * h_{t-1} + x_t.
+
+    log_a, x: (B, S, W); h0: (B, W). Returns h: (B, S, W) in fp32.
+    """
+    def step(h, inp):
+        la, xx = inp
+        h = jnp.exp(la) * h + xx
+        return h, h
+
+    la = log_a.astype(jnp.float32).swapaxes(0, 1)
+    xx = x.astype(jnp.float32).swapaxes(0, 1)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (la, xx))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production mesh needs 512 placeholder host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-4b \
+        --shape train_4k --mesh single --out artifacts/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo as H
+from repro.analysis import hlo_graph as HG
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool, out_dir=None,
+               rule_overrides=None, kv_seq_axis=None, tag="", verbose=True,
+               param_mode=None):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    kw = {}
+    if rule_overrides:
+        kw["rule_overrides"] = rule_overrides
+    if kv_seq_axis and shape.kind != "train":
+        kw["kv_seq_axis"] = kv_seq_axis
+    if param_mode and shape.kind == "train":
+        kw["param_mode"] = param_mode
+    built = build_step(cfg, mesh, shape, **kw)
+    with mesh:
+        lowered = built.fn.lower(*built.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:          # CPU backend may not implement this
+        mem_info = {"error": str(e)}
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    graph = HG.analyze(text)          # trip-corrected dot flops + collectives
+    coll = dict(graph.coll_bytes)
+    coll["_counts"] = graph.coll_counts
+    model_flops = H.step_model_flops(cfg, shape)
+    cost_corrected = dict(cost)
+    cost_corrected["flops"] = max(float(cost.get("flops", 0) or 0),
+                                  graph.dot_flops)
+    rl = H.roofline_terms(cost_corrected, coll, n_chips, model_flops)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": built.kind, "n_chips": n_chips, "tag": tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": rl.flops,
+        "flops_xla_single_trip": float(cost.get("flops", 0) or 0),
+        "loops": graph.loops[:12],
+        "bytes_per_device": rl.bytes_accessed,
+        "collective_bytes_per_device": rl.coll_bytes,
+        "collectives": {k: v for k, v in coll.items() if not k.startswith("_")},
+        "collective_counts": coll["_counts"],
+        "memory": mem_info,
+        "roofline": {
+            "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s, "dominant": rl.dominant,
+            "model_flops": rl.model_flops, "useful_ratio": rl.useful_ratio,
+        },
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(out_dir, f"{arch}_{shape_name}_{rec['mesh']}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        r = rec["roofline"]
+        print(f"[dryrun] {arch:>18s} {shape_name:>12s} {rec['mesh']:>7s} "
+              f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s | "
+              f"comp {r['compute_s']*1e3:9.3f}ms mem {r['memory_s']*1e3:9.3f}ms "
+              f"coll {r['collective_s']*1e3:9.3f}ms -> {r['dominant']}"
+              f" useful={r['useful_ratio']:.2f}", flush=True)
+    return rec
+
+
+def dryrun_disagg(arch: str, out_dir=None, n_prefill: int = 8, verbose=True):
+    """RAPID's disaggregated deployment: the data axis of the single-pod mesh
+    is split into a prefill pool and a decode pool (paper: GPU roles); the
+    prefill step lowers+compiles on the prefill sub-mesh and the serve step
+    on the decode sub-mesh. Proves a role re-partition always has a valid
+    sharding on both sides (the controller's MoveGPU changes n_prefill)."""
+    from repro.launch.mesh import split_disagg_mesh
+    cfg = get_config(arch)
+    mesh = make_production_mesh()
+    pre_mesh, dec_mesh = split_disagg_mesh(mesh, n_prefill)
+    t0 = time.perf_counter()
+    pre = build_step(cfg, pre_mesh, INPUT_SHAPES["prefill_32k"])
+    with pre_mesh:
+        pre_c = pre.fn.lower(*pre.args).compile()
+    dec = build_step(cfg, dec_mesh, INPUT_SHAPES["decode_32k"])
+    with dec_mesh:
+        dec_c = dec.fn.lower(*dec.args).compile()
+    dt = time.perf_counter() - t0
+    rec = {
+        "arch": arch, "mode": "disagg",
+        "prefill_mesh": str(dict(zip(pre_mesh.axis_names,
+                                     pre_mesh.devices.shape))),
+        "decode_mesh": str(dict(zip(dec_mesh.axis_names,
+                                    dec_mesh.devices.shape))),
+        "prefill_flops": float(pre_c.cost_analysis().get("flops", 0) or 0),
+        "decode_flops": float(dec_c.cost_analysis().get("flops", 0) or 0),
+        "compile_s": round(dt, 1),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}_disagg.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[dryrun-disagg] {arch:>18s} {n_prefill}P/"
+              f"{mesh.shape['data']-n_prefill}D pools compiled in {dt:5.1f}s",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--disagg", action="store_true",
+                    help="lower the prefill/decode pool sub-mesh deployment")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    if args.disagg:
+        fails = []
+        for arch in archs:
+            try:
+                dryrun_disagg(arch, out_dir=args.out)
+            except Exception:
+                fails.append(arch)
+                traceback.print_exc()
+        if fails:
+            raise SystemExit(f"disagg dry-run failures: {fails}")
+        print("[dryrun] all disaggregated pool deployments compiled OK")
+        return
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    dryrun_one(arch, shape, mp, out_dir=args.out)
+                except Exception:
+                    failures.append((arch, shape, mp))
+                    print(f"[dryrun] FAILED {arch} {shape} multi_pod={mp}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Production meshes and the disaggregated mesh split.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes_for(global_batch: int, mesh) -> Tuple[str, ...]:
+    """Largest prefix of the batch-capable mesh axes that divides the batch.
+
+    bs=1 (long_500k) -> () i.e. replicated batch; bs=128 on (pod,data) -> both.
+    """
+    cand = [a for a in ("pod", "data") if a in mesh.axis_names]
+    axes = []
+    prod = 1
+    for a in cand:
+        n = mesh.shape[a]
+        if global_batch % (prod * n) == 0:
+            axes.append(a)
+            prod *= n
+    return tuple(axes)
+
+
+def split_disagg_mesh(mesh, n_prefill: int):
+    """Split the data axis of a mesh into prefill/decode sub-meshes.
+
+    The TPU analogue of the paper's prefill/decode GPU pools: pool membership
+    is a partition of the ``data`` axis; role reallocation re-partitions it
+    (drain + re-form, charged 2-5 s by the controller).
+    """
+    devs = np.asarray(mesh.devices)            # (data, model) or (pod, data, model)
+    axis = list(mesh.axis_names).index("data")
+    assert 0 < n_prefill < devs.shape[axis]
+    take = lambda sl: np.take(devs, sl, axis=axis)
+    pre = jax.sharding.Mesh(take(range(n_prefill)), mesh.axis_names)
+    dec = jax.sharding.Mesh(take(range(n_prefill, devs.shape[axis])),
+                            mesh.axis_names)
+    return pre, dec

@@ -1,0 +1,56 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [--smoke]``.
+
+--smoke serves a reduced model through the real-compute disaggregated
+engine (prefill worker -> ring buffer -> decode worker) with the RAPID
+controller enabled. Without --smoke it builds + compiles the production
+serve step for the requested shape (decode_32k by default).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prefill-workers", type=int, default=1)
+    ap.add_argument("--decode-workers", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        from repro.core.controller import ControllerConfig
+        from repro.serving.engine import DisaggEngine
+        rcfg = cfg.reduced()
+        eng = DisaggEngine(rcfg, n_prefill=args.prefill_workers,
+                           n_decode=args.decode_workers, max_len=96,
+                           decode_slots=4,
+                           ctrl_cfg=ControllerConfig())
+        rng = np.random.default_rng(0)
+        for _ in range(args.requests):
+            eng.submit(rng.integers(0, rcfg.vocab_size, 24).astype(np.int32),
+                       12, 0.0)
+        s = eng.run()
+        print(f"[serve] {rcfg.name}: {s.n_finished}/{s.n_total} finished  "
+              f"{s.row()}")
+        return
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+    mesh = make_production_mesh()
+    shape = INPUT_SHAPES[args.shape]
+    built = build_step(cfg, mesh, shape)
+    with mesh:
+        compiled = built.fn.lower(*built.args).compile()
+    print(f"[serve] {cfg.name} {shape.name}: compiled for {mesh.shape}; "
+          f"flops={compiled.cost_analysis().get('flops', 0):.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Build the jitted, sharding-annotated step functions for a (cfg, mesh,
+input-shape) triple. Used by the dry-run, the launchers, and the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import shardspecs as SS
+from repro.launch.mesh import batch_axes_for
+from repro.models import LM, make_batch_specs
+from repro.models.sharding import standard_rules, use_rules
+from repro.training.optimizer import AdamWConfig, apply_updates, init_state
+
+LONG_CONTEXT_WINDOW = 8192   # sliding-window used by full-attention archs
+                             # for the long_500k shape (sub-quadratic decode)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: "jax.stages.Wrapped"
+    args: tuple                # abstract arg values (ShapeDtypeStructs)
+    mesh: object
+    rules: dict
+    kind: str
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> Optional[int]:
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm", "audio"):
+        return LONG_CONTEXT_WINDOW
+    return cfg.window
+
+
+def _rules_for(cfg: ModelConfig, mesh, overrides=None):
+    rules = standard_rules("pod" in mesh.axis_names)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                     dtype=jnp.bfloat16, opt_cfg: Optional[AdamWConfig] = None,
+                     rule_overrides=None, remat=True,
+                     param_mode: str = "2d") -> BuiltStep:
+    lm = LM(cfg)
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=jnp.bfloat16)
+    if param_mode == "fsdp":
+        # ZeRO-3: no tensor parallelism; batch over every mesh axis;
+        # per-layer weight all-gather inside the scan (fsdp_gather rule)
+        fs = {"heads": None, "kv_heads": None, "d_ff": None, "experts": None,
+              "vocab": None, "lru": None, "fsdp_gather": True,
+              "batch": (("pod", "data", "model")
+                        if "pod" in mesh.axis_names else ("data", "model"))}
+        rule_overrides = {**fs, **(rule_overrides or {})}
+    rules = _rules_for(cfg, mesh, rule_overrides)
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    if param_mode == "fsdp":
+        baxes = rules["batch"]
+    window = effective_window(cfg, shape)
+
+    abstract_params = lm.init_abstract(dtype)
+    abstract_opt = jax.eval_shape(lambda p: init_state(opt_cfg, p),
+                                  abstract_params)
+    abstract_batch = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                      dtype)
+    if param_mode == "fsdp":
+        p_shard = SS.param_shardings_fsdp(abstract_params, mesh)
+    else:
+        p_shard = SS.param_shardings(cfg, abstract_params, mesh)
+    o_shard = {
+        "m": p_shard, "v": p_shard,
+        "count": NamedSharding(mesh, P()),
+    }
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           SS.batch_specs(cfg, abstract_batch, baxes))
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules, mesh):
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss(p, batch, window=window, remat=remat))(params)
+            params, opt_state, metrics = apply_updates(opt_cfg, params, grads,
+                                                       opt_state)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_shard, o_shard, b_shard),
+                 out_shardings=(p_shard, o_shard,
+                                NamedSharding(mesh, P())),
+                 donate_argnums=(0, 1))
+    return BuiltStep(fn, (abstract_params, abstract_opt, abstract_batch),
+                     mesh, rules, "train")
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: InputShape,
+                       dtype=jnp.bfloat16, rule_overrides=None,
+                       kv_seq_axis=None) -> BuiltStep:
+    lm = LM(cfg)
+    rules = _rules_for(cfg, mesh, rule_overrides)
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    window = effective_window(cfg, shape)
+
+    abstract_params = lm.init_abstract(dtype)
+    abstract_batch = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                      dtype, with_labels=False)
+    abstract_cache = jax.eval_shape(
+        lambda: lm.init_cache(shape.global_batch, shape.seq_len, dtype,
+                              window=window))
+    p_shard = SS.param_shardings(cfg, abstract_params, mesh)
+    b_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           SS.batch_specs(cfg, abstract_batch, baxes))
+    c_shard = SS.cache_shardings(cfg, abstract_cache, mesh, baxes, kv_seq_axis)
+
+    def prefill_step(params, batch, cache):
+        with use_rules(rules, mesh):
+            logits, cache = lm.prefill(params, batch, cache, window=window)
+            return jnp.argmax(logits, axis=-1), cache
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(p_shard, b_shard, c_shard),
+                 out_shardings=(NamedSharding(mesh, P(baxes or None)), c_shard),
+                 donate_argnums=(2,))
+    return BuiltStep(fn, (abstract_params, abstract_batch, abstract_cache),
+                     mesh, rules, "prefill")
+
+
+def build_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
+                     dtype=jnp.bfloat16, rule_overrides=None,
+                     kv_seq_axis=None) -> BuiltStep:
+    """One decode step: new token given a KV cache of shape.seq_len."""
+    lm = LM(cfg)
+    if kv_seq_axis:
+        rule_overrides = dict(rule_overrides or {}, kv_seq=kv_seq_axis)
+    rules = _rules_for(cfg, mesh, rule_overrides)
+    baxes = batch_axes_for(shape.global_batch, mesh)
+    window = effective_window(cfg, shape)
+
+    abstract_params = lm.init_abstract(dtype)
+    abstract_cache = jax.eval_shape(
+        lambda: lm.init_cache(shape.global_batch, shape.seq_len, dtype,
+                              window=window))
+    abstract_token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    p_shard = SS.param_shardings(cfg, abstract_params, mesh)
+    c_shard = SS.cache_shardings(cfg, abstract_cache, mesh, baxes, kv_seq_axis)
+    t_shard = NamedSharding(mesh, P(baxes or None))
+
+    def serve_step(params, token, cache):
+        with use_rules(rules, mesh):
+            logits, cache = lm.decode_step(params, token, cache, window=window)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, t_shard, c_shard),
+                 out_shardings=(t_shard, c_shard),
+                 donate_argnums=(2,))
+    return BuiltStep(fn, (abstract_params, abstract_token, abstract_cache),
+                     mesh, rules, "decode")
+
+
+def build_step(cfg: ModelConfig, mesh, shape: InputShape, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,59 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+--smoke runs the reduced config end-to-end on CPU. Without --smoke, builds
+the production-mesh train step (requires a real TPU slice or the dry-run
+device-count override) and runs ``--steps`` steps from the synthetic
+pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, get_config
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+        params, hist = train(cfg, steps=args.steps, batch_size=args.batch,
+                             seq_len=args.seq, ckpt_path=args.ckpt)
+        print(f"[train] {cfg.name}: loss {hist[0]:.3f} -> {hist[-1]:.3f}")
+        return
+    # production path: mesh + sharded step (same builder as the dry-run)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_train_step
+    from repro.training.data import TokenStream
+    from repro.training.optimizer import AdamWConfig, init_state
+
+    mesh = make_production_mesh()
+    shape = INPUT_SHAPES["train_4k"]
+    built = build_train_step(cfg, mesh, shape)
+    lm_data = TokenStream(cfg)
+    with mesh:
+        from repro.models import LM
+        lm = LM(cfg)
+        params = lm.init(jax.random.key(0), dtype=jnp.bfloat16)
+        opt = init_state(AdamWConfig(state_dtype=jnp.bfloat16), params)
+        for step in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     lm_data.batch(shape.global_batch, shape.seq_len).items()}
+            params, opt, metrics = built.fn(params, opt, batch)
+            print(f"step {step} loss {float(metrics['loss']):.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

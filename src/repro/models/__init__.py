@@ -1,0 +1,1 @@
+from repro.models.api import LM, make_batch_specs, make_demo_batch

@@ -1,0 +1,127 @@
+"""Capacity-based top-k MoE FFN (GShard-style dense dispatch).
+
+Tokens are grouped (``moe_group_size`` per group); each group dispatches to
+experts with capacity C = ceil(group * capacity_factor * k / E). Dispatch is
+an einsum against a one-hot (group, E, C) tensor, which XLA SPMD shards over
+the ``experts`` (= model) mesh axis — the expert-parallel pattern. Overflow
+tokens are dropped (residual passes through), matching Switch/GShard.
+
+Returns an aux load-balancing loss (Switch eq. 4) accumulated by the caller.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain
+
+
+def init_moe(key, cfg, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype, scale=0.02),
+        "wi": dense_init(ks[1], (E, D, F), dtype),
+        "wo": dense_init(ks[2], (E, F, D), dtype, scale=1.0 / math.sqrt(F)),
+    }
+    if cfg.mlp == "swiglu":
+        p["wg"] = dense_init(ks[3], (E, D, F), dtype)
+    if cfg.shared_expert:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def _capacity(group: int, cfg) -> int:
+    return max(1, int(math.ceil(group * cfg.capacity_factor * cfg.top_k
+                                / cfg.n_experts)))
+
+
+def moe_forward(p, x, cfg, dropless: bool = False):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    ``dropless=True`` (decode) sets capacity = group size, so no token can
+    overflow — exact routing at O(batch) extra dispatch cost. Train/prefill
+    use GShard capacity dropping.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group_size, B * S)
+    T = B * S
+    # pad so the flat token stream divides into groups
+    n_groups = -(-T // g)
+    pad = n_groups * g - T
+    xf = x.reshape(T, D)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(n_groups, g, D)
+    C = g if dropless else _capacity(g, cfg)
+
+    logits = (xg @ p["router"].astype(jnp.float32)
+              if p["router"].dtype != jnp.float32
+              else xg @ p["router"]).astype(jnp.float32)   # (N, g, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k routing with per-expert capacity ---------------------------
+    dispatch = jnp.zeros((n_groups, g, E, C), dtype=xg.dtype)
+    combine = jnp.zeros((n_groups, g, E, C), dtype=jnp.float32)
+    masked_gates = gates
+    counts = jnp.zeros((n_groups, 1, E), dtype=jnp.int32)
+    gate_sum = jnp.zeros((n_groups, g), dtype=jnp.float32)
+    sel_onehots = []
+    for _ in range(k):
+        idx = jnp.argmax(masked_gates, axis=-1)                 # (N, g)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)        # (N, g, E)
+        sel_onehots.append(onehot)
+        gate_j = jnp.sum(gates * onehot, axis=-1)               # (N, g)
+        # position of each routed token within its expert's capacity
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts      # (N, g, E)
+        within = (pos < C) & (onehot > 0)
+        pos_sel = jnp.sum(pos * onehot, axis=-1)                # (N, g)
+        fits = jnp.sum(jnp.where(within, 1, 0), axis=-1) > 0    # (N, g)
+        pos_oh = jax.nn.one_hot(pos_sel, C, dtype=xg.dtype)     # (N, g, C)
+        d_j = (onehot.astype(xg.dtype)[..., None] * pos_oh[:, :, None, :])
+        d_j = d_j * fits.astype(xg.dtype)[:, :, None, None]
+        dispatch = dispatch + d_j
+        combine = combine + d_j.astype(jnp.float32) * gate_j[:, :, None, None]
+        gate_sum = gate_sum + gate_j * fits.astype(jnp.float32)
+        counts = counts + jnp.sum(jnp.where(within, onehot, 0), axis=1,
+                                  keepdims=True)
+        masked_gates = masked_gates * (1 - onehot.astype(jnp.float32))
+    # renormalize combine weights over the selected experts
+    combine = combine / jnp.maximum(gate_sum, 1e-9)[:, :, None, None]
+    combine = combine.astype(xg.dtype)
+
+    # --- aux load-balance loss (Switch eq. 4) ------------------------------
+    sel = sum(sel_onehots).astype(jnp.float32)
+    frac_tokens = jnp.mean(sel, axis=1)                          # (N, E)
+    frac_probs = jnp.mean(gates, axis=1)                         # (N, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1)) / k
+
+    # --- expert computation -------------------------------------------------
+    # N (the group dim, carrying the batch) stays sharded over the data axes
+    # while E shards over the model axis: expert-parallel x data-parallel.
+    xe = jnp.einsum("ngd,ngec->ecnd", xg, dispatch)              # (E, C, N, D)
+    xe = constrain(xe, "experts", None, "batch", None)
+    if "wg" in p:
+        h = jax.nn.silu(jnp.einsum("ecnd,edf->ecnf", xe, p["wg"]))
+        h = h * jnp.einsum("ecnd,edf->ecnf", xe, p["wi"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecnd,edf->ecnf", xe, p["wi"]))
+    h = constrain(h, "experts", None, "batch", None)
+    ye = jnp.einsum("ecnf,efd->ecnd", h, p["wo"])                # (E, C, N, D)
+    ye = constrain(ye, "experts", None, "batch", None)
+    out = jnp.einsum("ecnd,ngec->ngd", ye, combine)              # (N, g, D)
+    out = constrain(out, "batch", None, None)
+
+    out = out.reshape(n_groups * g, D)
+    if pad:
+        out = out[:T]
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        from repro.models.layers import mlp_forward
+        out = out + mlp_forward(p["shared"], x, cfg)
+    return out, aux

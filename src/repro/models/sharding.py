@@ -1,0 +1,97 @@
+"""Logical-axis sharding annotations (MaxText-style, minimal).
+
+Model code annotates activations with *logical* axis names; the launcher
+installs a rules table mapping logical names -> mesh axes. Outside a rules
+context (CPU smoke tests) annotations are no-ops, so model code is written
+once and runs both places.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# logical axis -> mesh axes. Installed by the launcher.
+_RULES: Optional[Dict[str, MeshAxes]] = None
+_MESH = None
+
+# Canonical rule sets -------------------------------------------------------
+
+def standard_rules(multi_pod: bool) -> Dict[str, MeshAxes]:
+    """2D (data, model) sharding; batch additionally over the pod axis."""
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch,
+        "seq": None,           # sequence replicated by default (see kv_seq)
+        "d_model": None,       # activations replicated over model on entry
+        "heads": "model",
+        "kv_heads": None,      # GQA: kv heads usually < model axis -> replicate
+        "d_ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "kv_batch": batch,     # kv-cache batch dim
+        "kv_seq": None,        # set to "model" for seq-sharded long-KV decode
+        "lru": "model",        # RG-LRU / mLSTM inner width
+    }
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, MeshAxes], mesh=None):
+    global _RULES, _MESH
+    prev, prev_mesh = _RULES, _MESH
+    _RULES, _MESH = rules, mesh
+    try:
+        yield
+    finally:
+        _RULES, _MESH = prev, prev_mesh
+
+
+def logical_to_spec(axes: Sequence[Optional[str]]) -> P:
+    assert _RULES is not None
+    return P(*[_RULES.get(a) if a is not None else None for a in axes])
+
+
+def constrain(x, *axes: Optional[str]):
+    """Annotate ``x`` with logical axes (one per dim; None = replicated)."""
+    if _RULES is None:
+        return x
+    spec = logical_to_spec(axes)
+    if _MESH is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(_MESH, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def active() -> bool:
+    return _RULES is not None
+
+
+def rule(name: str):
+    """Mesh axes mapped to a logical axis (None outside a rules context)."""
+    return _RULES.get(name) if _RULES is not None else None
+
+
+def maybe_gather_params(p):
+    """ZeRO-3 / FSDP: when the 'fsdp_gather' rule is set, constrain the
+    current layer's weight slices to replicated — GSPMD materializes an
+    all-gather here (and a reduce-scatter for the grads in the backward),
+    so only one layer's weights are ever live replicated inside the scan."""
+    if _RULES is None or not _RULES.get("fsdp_gather"):
+        return p
+    import jax.numpy as jnp  # noqa: F401
+
+    def repl(x):
+        spec = P(*(None,) * x.ndim)
+        if _MESH is not None:
+            return jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(_MESH, spec))
+        return x
+    return jax.tree.map(repl, p)
+
+
+def mesh():
+    return _MESH

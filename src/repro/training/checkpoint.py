@@ -1,0 +1,42 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like: Any):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    step = int(data["__step__"])
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,56 @@
+"""Training loop: jitted train_step + a small driver usable on CPU (smoke /
+examples) and under a production mesh (launch/train.py)."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import LM
+from repro.training import checkpoint as ckpt
+from repro.training.data import TokenStream
+from repro.training.optimizer import AdamWConfig, apply_updates, init_state
+
+
+def make_train_step(lm: LM, opt_cfg: AdamWConfig, *, window=None, remat=True):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss(p, batch, window=window, remat=remat))(params)
+        params, opt_state, metrics = apply_updates(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, *, steps: int = 50, batch_size: int = 8,
+          seq_len: int = 128, seed: int = 0, param_dtype=jnp.float32,
+          opt_cfg: Optional[AdamWConfig] = None, ckpt_path: Optional[str] = None,
+          log_every: int = 10, remat=True):
+    """End-to-end single-host training driver (used by examples + tests)."""
+    lm = LM(cfg)
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps, warmup_steps=max(steps // 10, 1))
+    params = lm.init(jax.random.key(seed), dtype=param_dtype)
+    opt_state = init_state(opt_cfg, params)
+    data = TokenStream(cfg, seed=seed)
+    step_fn = jax.jit(make_train_step(lm, opt_cfg, remat=remat),
+                      donate_argnums=(0, 1))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data.batch(batch_size, seq_len).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        history.append(loss)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d} loss {loss:7.4f} "
+                  f"gnorm {float(metrics['grad_norm']):6.3f} "
+                  f"({dt:6.1f}s)", flush=True)
+    if ckpt_path:
+        ckpt.save(ckpt_path, {"params": params}, step=steps)
+    return params, history

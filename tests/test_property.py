@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.power_manager import PowerManager
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.serving.ring import KVRing
+
+
+# ---------------------------------------------------------------------------
+# PowerManager: node budget is NEVER exceeded under arbitrary command traces
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7),
+                          st.floats(350, 800),
+                          st.floats(0.0, 2.0)), min_size=1, max_size=40))
+def test_power_budget_invariant(commands):
+    pm = PowerManager(8, 4800.0, initial_caps=[600.0] * 8)
+    t = 0.0
+    for gpu, watts, dt in commands:
+        t += dt
+        pm.tick(t)
+        pm.set_cap(t, gpu, watts)
+        # worst-case draw never exceeds the budget
+        assert pm._worst_case() <= 4800.0 + 1e-6
+        assert all(400.0 - 1e-9 <= c <= 750.0 + 1e-9 for c in pm.commanded)
+    pm.tick(t + 10.0)
+    assert sum(pm.effective) <= 4800.0 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 7), st.floats(10, 300))
+def test_power_shift_conserves_budget(n_src, watts):
+    pm = PowerManager(8, 4800.0, initial_caps=[600.0] * 8)
+    src = list(range(n_src))
+    dst = list(range(n_src, 8))
+    t_ready, freed = pm.shift(0.0, src, dst, watts)
+    assert pm._worst_case() <= 4800.0 + 1e-6
+    pm.tick(t_ready)
+    pm.apply_raise(t_ready, dst, freed)
+    assert pm._worst_case() <= 4800.0 + 1e-6
+    assert sum(pm.commanded) <= 4800.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# KV ring buffer: conservation + FIFO of ready slots
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=200),
+       st.integers(1, 8))
+def test_ring_conservation(ops, n_slots):
+    ring = KVRing(n_slots)
+    put_seq = 0
+    pulled = []
+    for is_put in ops:
+        if is_put:
+            idx = ring.try_put(put_seq)
+            if idx is not None:
+                put_seq += 1
+        else:
+            out = ring.try_pull()
+            if out is not None:
+                pulled.append(out)
+        assert ring.n_free + ring.n_ready <= n_slots
+    assert pulled == sorted(pulled)          # FIFO
+    assert len(pulled) + ring.n_ready == put_seq
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan: kernel == sequential reference on random shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3),
+       st.sampled_from([64, 128, 256]),
+       st.sampled_from([128, 256]),
+       st.integers(0, 1000))
+def test_rglru_random(B, S, W, seed):
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 3)
+    la = -jnp.abs(jax.random.normal(ks[0], (B, S, W))) * 0.3
+    x = jax.random.normal(ks[1], (B, S, W))
+    h0 = jax.random.normal(ks[2], (B, W))
+    out = rglru_scan(la, x, h0, chunk=64, bw=128)
+    ref = rglru_scan_ref(la, x, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# goodput metric sanity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0.01, 3.0),
+                          st.floats(0.001, 0.2), st.integers(2, 300)),
+                min_size=1, max_size=50))
+def test_goodput_bounds(reqs):
+    from repro.core.goodput import RequestRecord, summarize
+    records = []
+    for i, (arr, ttft_off, tpot, out) in enumerate(reqs):
+        r = RequestRecord(i, arr, 100, out)
+        r.prefill_done = arr + ttft_off
+        r.finish = r.prefill_done + tpot * (out - 1)
+        records.append(r)
+    s = summarize(records, duration_s=20.0, avg_provisioned_w=4800.0)
+    assert 0.0 <= s.slo_attainment <= 1.0
+    assert s.n_good <= s.n_finished == len(records)
+    # manual check
+    manual = sum(1 for r in records
+                 if r.ttft <= 1.0 + 1e-9 and r.tpot <= 0.040 + 1e-9)
+    assert s.n_good == manual
+
+
+# ---------------------------------------------------------------------------
+# cost model: monotone in power, KV transfer in TPOT accounting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(400, 740), st.floats(5, 300))
+def test_costmodel_monotone_in_power(cap, extra):
+    from repro.configs import get_config
+    from repro.core.costmodel import MI300X, CostModel
+    from repro.core.power_model import mi300x
+    cm = CostModel(get_config("llama31_8b"), MI300X, mi300x())
+    hi = min(cap + extra, 750.0)
+    assert cm.prefill_time(4096, cap) >= cm.prefill_time(4096, hi) - 1e-12
+    assert cm.decode_step_time(32, 4096, cap) >= \
+        cm.decode_step_time(32, 4096, hi) - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(128, 16384))
+def test_decode_time_monotone_in_batch_and_ctx(batch, ctx):
+    from repro.configs import get_config
+    from repro.core.costmodel import MI300X, CostModel
+    from repro.core.power_model import mi300x
+    cm = CostModel(get_config("llama31_8b"), MI300X, mi300x())
+    t = cm.decode_step_time(batch, ctx, 600)
+    assert cm.decode_step_time(batch + 1, ctx, 600) >= t - 1e-12
+    assert cm.decode_step_time(batch, ctx + 512, 600) >= t - 1e-12
+    # throughput (tokens/s) must not decrease with batch
+    assert (batch + 1) / cm.decode_step_time(batch + 1, ctx, 600) >= \
+        batch / t - 1e-9

@@ -1,0 +1,146 @@
+"""RAPID core behaviour: power model calibration, Algorithm 1 decisions,
+power-manager source-before-sink semantics (paper Figs 4, Algorithm 1)."""
+import dataclasses
+
+import pytest
+
+from repro.core.controller import (ControllerConfig, Observation,
+                                   RapidController, policy_nonuniform)
+from repro.core.costmodel import MI300X, CostModel
+from repro.core.power_manager import PowerManager, SimulatedSMI
+from repro.core.power_model import mi300x
+from repro.configs import get_config
+
+
+# -- power model calibration (paper Fig 4) ----------------------------------
+
+def test_prefill_speedup_matches_paper():
+    pm = mi300x()
+    s = pm.speedup("prefill", 750) / pm.speedup("prefill", 400)
+    assert 1.7 <= s <= 1.9          # paper: ~1.8x for 1.87x power
+
+
+def test_decode_flattens_beyond_600w():
+    pm = mi300x()
+    s750 = pm.speedup("decode", 750) / pm.speedup("decode", 400)
+    s600 = pm.speedup("decode", 600) / pm.speedup("decode", 400)
+    assert 1.25 <= s750 <= 1.5      # paper: 1.3-1.5x
+    assert (s750 - s600) / s600 < 0.05   # <5% gain beyond 600 W
+
+
+def test_prefill_more_power_sensitive_than_decode():
+    cm = CostModel(get_config("llama31_8b"), MI300X, mi300x())
+    pre_gain = cm.prefill_time(4096, 400) / cm.prefill_time(4096, 750)
+    dec_gain = cm.decode_step_time(32, 4096, 400) / \
+        cm.decode_step_time(32, 4096, 750)
+    assert pre_gain > dec_gain
+
+
+# -- power manager ------------------------------------------------------------
+
+def test_source_lowered_before_sink_raised():
+    pm = PowerManager(8, 4800.0, backend=SimulatedSMI(0.3),
+                      initial_caps=[600.0] * 8)
+    t_ready, freed = pm.shift(0.0, src=[4, 5, 6, 7], dst=[0, 1, 2, 3],
+                              watts_per_gpu=150.0)
+    assert t_ready == pytest.approx(0.3)
+    assert freed == pytest.approx(600.0)
+    # before enforcement: sinks unchanged; worst case still within budget
+    pm.tick(0.1)
+    assert pm.effective[:4] == [600.0] * 4
+    assert pm._worst_case() <= 4800.0 + 1e-6
+    pm.tick(0.3)
+    pm.apply_raise(0.3, [0, 1, 2, 3], freed)
+    assert pm.effective[:4] == [750.0] * 4
+    assert pm.effective[4:] == [450.0] * 4
+    assert sum(pm.effective) <= 4800.0 + 1e-6
+
+
+def test_raise_clamped_to_headroom():
+    pm = PowerManager(8, 4800.0, initial_caps=[600.0] * 8)
+    # raising without freeing must be clamped, not violate the budget
+    pm.set_cap(0.0, 0, 750.0)
+    assert pm._worst_case() <= 4800.0 + 1e-6
+    assert pm.commanded[0] == pytest.approx(600.0)  # no headroom -> no-op
+
+
+# -- Algorithm 1 decision table ----------------------------------------------
+
+def _ctrl(caps=None, **kw):
+    cfg = dataclasses.replace(ControllerConfig(), allow_power=True,
+                              allow_gpu=True, **kw)
+    pm = PowerManager(8, 4800.0, initial_caps=caps or [600.0] * 8)
+    return RapidController(cfg, pm), pm
+
+
+def test_ttft_stress_moves_power_decode_to_prefill():
+    ctrl, _ = _ctrl()
+    obs = Observation(now=100.0, ttft_p90=2.0, tpot_p90=0.02,
+                      q_prefill=10, q_decode=0)
+    d = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d.kind == "power" and d.direction == "d2p"
+
+
+def test_tpot_stress_moves_power_prefill_to_decode():
+    # decode below its 600 W ceiling -> power moves first
+    ctrl, _ = _ctrl(caps=[650.0] * 4 + [550.0] * 4)
+    obs = Observation(now=100.0, ttft_p90=0.2, tpot_p90=0.08,
+                      q_prefill=0, q_decode=5)
+    d = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d.kind == "power" and d.direction == "p2d"
+
+
+def test_tpot_stress_at_decode_ceiling_moves_gpu():
+    # decode already at the 600 W ceiling -> POWERLIMITSREACHED -> MoveGPU
+    ctrl, _ = _ctrl()
+    obs = Observation(now=100.0, ttft_p90=0.2, tpot_p90=0.08,
+                      q_prefill=0, q_decode=5)
+    d = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d.kind == "gpu" and d.direction == "p2d"
+
+
+def test_gpu_move_when_power_limits_reached():
+    ctrl, pm = _ctrl()
+    for g in [0, 1, 2, 3]:
+        pm.set_cap(0.0, g, 400.0)   # decode gpus 4..7? prefill at min
+    pm.tick(1.0)
+    # prefill (src for p2d) at min -> power saturated -> MoveGPU
+    obs = Observation(now=100.0, ttft_p90=0.2, tpot_p90=0.08,
+                      q_prefill=0, q_decode=5)
+    d = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d.kind == "gpu" and d.direction == "p2d"
+
+
+def test_both_violated_does_nothing():
+    ctrl, _ = _ctrl()
+    obs = Observation(now=100.0, ttft_p90=5.0, tpot_p90=0.5,
+                      q_prefill=50, q_decode=50)
+    d = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d.kind == "none"
+
+
+def test_cooldown_blocks_consecutive_moves():
+    ctrl, _ = _ctrl()
+    obs = Observation(now=100.0, ttft_p90=2.0, tpot_p90=0.02,
+                      q_prefill=10, q_decode=0)
+    d1 = ctrl.tick(obs, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d1.kind == "power"
+    obs2 = dataclasses.replace(obs, now=100.1)
+    d2 = ctrl.tick(obs2, [0, 1, 2, 3], [4, 5, 6, 7])
+    assert d2.kind == "none" and d2.note == "cooldown"
+
+
+def test_decode_power_capped_at_600():
+    ctrl, pm = _ctrl(caps=[650.0] * 4 + [550.0] * 4)
+    assert pm.at_limits(src=[0, 1, 2, 3], dst=[4, 5, 6, 7],
+                        dst_max=600.0) is False
+    t_ready, freed = pm.shift(0.0, [0, 1, 2, 3], [4, 5, 6, 7], 50.0)
+    pm.tick(t_ready)
+    pm.apply_raise(t_ready, [4, 5, 6, 7], freed, dst_max=600.0)
+    assert all(c == 600.0 for c in pm.commanded[4:])
+    assert pm.at_limits(src=[0, 1, 2, 3], dst=[4, 5, 6, 7],
+                        dst_max=600.0) is True
+
+
+def test_static_policy_labels():
+    assert policy_nonuniform(750, 450).label() == "4P-750W/4D-450W"
