@@ -1,0 +1,140 @@
+"""Cluster scaling (beyond the paper's single node): 1/2/4/8 nodes under a
+facility power budget, LongBench + two-phase Sonnet workloads, three power
+regimes per point:
+
+  static        fixed per-node budgets, fixed per-GPU caps
+  DynPower      fixed per-node budgets, RAPID power shifting inside each node
+  DynPower+cluster  RAPID inside nodes + the coordinator moving node budgets
+                    (two-level hierarchy, source-before-sink at both levels)
+
+plus the skew experiment the cluster layer exists for: two nodes, one fed
+the Sonnet prefill-heavy phase (8k in / 128 out), the other decode-heavy
+(500 in / 500 out, 20 ms TPOT), static node budgets vs. cluster shifting.
+Facility budget invariant is asserted on every coordinator tick inside the
+simulator; this driver re-checks the recorded budget trace and requires the
+cluster-shift arm to strictly beat static per-node budgets.
+
+Nodes are deliberately budget-constrained (4000 W < 8 x 750 W peak): that is
+the regime where moving watts between nodes matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import dyn_ctrl, save_artifact
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import StaticPolicy, policy_4p4d
+from repro.core.simulator import Workload
+
+NODE_BUDGET_W = 4000.0          # power-constrained node (paper Section 5 regime)
+POLICY = policy_4p4d(500)       # 8 x 500 W fits the 4000 W node budget
+QPS_PER_NODE = {"longbench": 7.0, "sonnet": 6.0}
+
+
+def _workload(name: str, n_nodes: int, n_per_node: int, seed: int) -> Workload:
+    qps = QPS_PER_NODE[name] * n_nodes
+    if name == "longbench":
+        return Workload.longbench_like(n_per_node * n_nodes, qps=qps,
+                                       seed=seed)
+    return Workload.sonnet_phases(qps, seed=seed, n1=n_per_node * n_nodes // 2,
+                                  n2=n_per_node * n_nodes // 2)
+
+
+def _run(n_nodes: int, wl=None, pinned=None, *, ctrl=None, shift=False,
+         seed=0):
+    cs = ClusterSimulator(get_config("llama31_8b"), POLICY, n_nodes,
+                          node_budget_w=NODE_BUDGET_W, ctrl_cfg=ctrl,
+                          cluster_cfg=ClusterConfig(allow_shift=shift),
+                          seed=seed)
+    s = cs.run(wl, pinned=pinned)
+    # re-check the facility budget invariant over the recorded trace
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (t, budgets, total)
+    return cs, s
+
+
+def regimes():
+    return [
+        ("static", None, False),
+        ("DynPower", dyn_ctrl(gpu=False), False),
+        ("DynPower+cluster", dyn_ctrl(gpu=False), True),
+    ]
+
+
+def scaling_sweep(fast: bool):
+    node_counts = (1, 2) if fast else (1, 2, 4, 8)
+    n_per_node = 80 if fast else 250
+    rows = []
+    for wl_name in ("longbench", "sonnet"):
+        for n_nodes in node_counts:
+            for reg_name, ctrl, shift in regimes():
+                wl = _workload(wl_name, n_nodes, n_per_node, seed=3)
+                cs, s = _run(n_nodes, wl, ctrl=ctrl, shift=shift, seed=3)
+                rows.append({
+                    "workload": wl_name, "nodes": n_nodes, "regime": reg_name,
+                    "slo_attainment": s.slo_attainment,
+                    "goodput_rps": s.goodput_rps,
+                    "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+                    "qps_per_kw": s.qps_per_kw,
+                    "budget_shifts": len(cs.shift_trace),
+                })
+                print(f"{wl_name:9s} n={n_nodes}  {reg_name:17s} "
+                      f"att={s.slo_attainment*100:5.1f}%  "
+                      f"goodput={s.goodput_rps:6.2f} req/s  "
+                      f"shifts={len(cs.shift_trace)}")
+    return rows
+
+
+def skew_experiment(fast: bool):
+    """Two nodes, opposite phase mixes: watts must cross the node boundary.
+
+    Node 0 gets the Sonnet prefill-heavy phase (8k in / 128 out, 2 s TTFT —
+    at 4.0 QPS it sits between the node's prefill capacity at a 4000 W
+    budget, ~4.3 req/s @600 W caps, and at a boosted one, ~4.8 req/s
+    @750 W); node 1 is decode-heavy (500/500, 20 ms TPOT) and — decode
+    saturating by ~600 W — barely slows down when the coordinator takes its
+    spare watts. Only cluster-level shifting can exploit that asymmetry."""
+    n = 100 if fast else 250
+    rows = {}
+    for reg_name, ctrl, shift in regimes():
+        if ctrl is not None:
+            ctrl = dataclasses.replace(ctrl, ttft_slo=2.0)
+        pinned = {
+            0: Workload.uniform(n, qps=4.0, in_tokens=8192, out_tokens=128,
+                                seed=11, ttft_slo=2.0,
+                                tpot_slo=0.040),   # sonnet prefill-heavy
+            1: Workload.uniform(n, qps=4.0, in_tokens=500, out_tokens=500,
+                                seed=12, tpot_slo=0.020),   # decode-heavy
+        }
+        cs, s = _run(2, pinned=pinned, ctrl=ctrl, shift=shift, seed=7)
+        rows[reg_name] = {
+            "slo_attainment": s.slo_attainment, "goodput_rps": s.goodput_rps,
+            "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+            "budget_shifts": len(cs.shift_trace),
+            "final_budgets": [nd.pm.budget for nd in cs.nodes],
+        }
+        print(f"skew 2-node  {reg_name:17s} att={s.slo_attainment*100:5.1f}%  "
+              f"{s.row()}  "
+              f"budgets={[round(nd.pm.budget) for nd in cs.nodes]}")
+    gain = rows["DynPower+cluster"]["slo_attainment"] - \
+        rows["DynPower"]["slo_attainment"]
+    print(f"\ncluster shifting vs static node budgets: "
+          f"{rows['DynPower+cluster']['slo_attainment']*100:.1f}% vs "
+          f"{rows['DynPower']['slo_attainment']*100:.1f}%  (+{gain*100:.1f}pp)")
+    assert rows["DynPower+cluster"]["slo_attainment"] > \
+        rows["DynPower"]["slo_attainment"], \
+        "cluster budget shifting must strictly beat static per-node budgets"
+    assert rows["DynPower+cluster"]["budget_shifts"] > 0
+    return rows
+
+
+def main(fast: bool = False):
+    rows = scaling_sweep(fast)
+    skew = skew_experiment(fast)
+    save_artifact("fig9_cluster_scaling", {"scaling": rows, "skew": skew})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

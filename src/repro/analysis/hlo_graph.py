@@ -30,6 +30,16 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+
+def _strip_async_suffix(opcode: str) -> str:
+    """Remove an async ``-start``/``-done`` *suffix* (``str.rstrip`` strips a
+    character set and would mangle e.g. ``all-to-all`` -> ``all-to-all`` ok
+    but ``broadcast`` -> ``broadca``)."""
+    for suf in ("-start", "-done"):
+        if opcode.endswith(suf):
+            return opcode[: -len(suf)]
+    return opcode
+
 _COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
 _OP_LINE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
@@ -111,6 +121,50 @@ def _param_shapes(comp: Computation) -> Dict[str, str]:
     return {op.name: op.shape for op in comp.ops if op.opcode == "parameter"}
 
 
+def _args_of(rest: str) -> str:
+    """Operand list of ``opcode(<args>)...``: everything up to the paren that
+    closes the call (TPU layouts like ``{1,0:T(8,128)}`` nest parens)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i]
+    return rest
+
+
+def _split_top(args: str) -> List[str]:
+    """Split on commas at bracket depth 0 (shapes carry ``[4,64]{1,0}``)."""
+    parts, cur, depth = [], [], 0
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _parse_operands(rest: str) -> List[tuple]:
+    """Operands of an op line as ``(name, inline_shape_or_None)``. Full-form
+    HLO prints each operand as ``dtype[dims]{layout} %name``; short form is
+    just ``%name`` (or a bare identifier)."""
+    out = []
+    for part in _split_top(_args_of(rest)):
+        toks = part.split()
+        name = toks[-1].lstrip("%")
+        shape = part[: -len(toks[-1])].strip() if len(toks) > 1 else None
+        out.append((name, shape or None))
+    return out
+
+
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups={{([\d,]+)}")
 
@@ -151,22 +205,22 @@ def _analyze_local(comp: Computation):
             rsize = 1
             for d in rdims:
                 rsize *= d
-            # contraction size from lhs operand shape + contracting dims
+            # contraction size from lhs operand shape + contracting dims;
+            # an inline operand shape (full-form dump) is authoritative,
+            # else fall back to the defining op inside this computation
             mC = _DIMS.search(op.rest)
-            lhs_name = op.rest.split("(")[0]  # operands start right here
-            operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+            operands = _parse_operands(op.rest)
             csize = 1
             if mC and operands:
-                lhs_shape = comp.shape_of(operands[0])
+                lhs_name, lhs_inline = operands[0]
+                lhs_shape = lhs_inline or comp.shape_of(lhs_name)
                 if lhs_shape:
                     _, ldims = _shape_dims(lhs_shape)
                     for ci in (int(x) for x in mC.group(1).split(",") if x):
                         if ci < len(ldims):
                             csize *= ldims[ci]
             flops += 2.0 * rsize * csize
-        elif op.opcode.rstrip("-start").rstrip("-done") in COLLECTIVES or \
-                any(op.opcode.startswith(c) for c in COLLECTIVES):
-            base = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+        elif (base := _strip_async_suffix(op.opcode)) in COLLECTIVES:
             if op.opcode.endswith("-done"):
                 continue
             b = _shape_bytes(op.shape) * _wire_factor(base,

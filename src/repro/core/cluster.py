@@ -1,0 +1,224 @@
+"""Multi-node cluster simulation: N power-capped nodes under one facility
+budget, a power-aware router, and a cluster coordinator that moves *node
+budgets* the same way ``PowerManager.shift`` moves per-GPU watts.
+
+Two-level power hierarchy (paper Algorithm 1, composed):
+
+  facility budget
+    -> node budgets     (ClusterCoordinator, source-before-sink: the source
+                         node lowers its GPU caps first via ``shrink_budget``;
+                         only when they are in force does ``commit_budget``
+                         release the watts and the sink ``grow_budget`` them)
+    -> per-GPU caps     (per-node PowerManager + RapidController, unchanged)
+
+Invariant asserted every coordinator tick AND after every budget handoff:
+``sum(node budgets) <= facility budget`` with worst-case accounting — a node
+whose budget shrink is still in flight counts at its OLD budget, exactly as
+an in-flight GPU cap lower counts at its old cap.
+
+All nodes advance on one shared ``EventLoop``; arrivals enter through the
+router (least-power-adjusted-load with a prefill-queue-age early warning,
+mirroring ``NodeSimulator._queue_ttft_estimate``) or pinned per node for
+heterogeneous / skewed workload experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.controller import (ControllerConfig, NodeStress, StaticPolicy)
+from repro.core.costmodel import MI300X, GPUSpec
+from repro.core.events import EventLoop
+from repro.core.goodput import GoodputSummary, RequestRecord, summarize
+from repro.core.power_model import PowerModel
+from repro.core.simulator import NodeSimulator, SimRequest, Workload
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Coordinator knobs (cluster-level analogue of ControllerConfig)."""
+    period_s: float = 1.0           # coordinator tick
+    shift_step_w: float = 200.0     # watts per node-budget move
+    cooldown_s: float = 2.0         # between budget moves
+    stress_gap: float = 0.25        # min (dst.stress - src.stress) to act
+    dst_stress_min: float = 1.0     # sink must be (about to be) violating
+    src_stress_max: float = 0.9     # source must be comfortably inside SLO
+    allow_shift: bool = True        # False: static node budgets (baseline)
+
+
+class PowerAwareRouter:
+    """Dispatch to the node with the least power-adjusted load. Ties (e.g.
+    an idle cluster) round-robin via a rotating start index so request 0..k
+    don't all pile onto node 0."""
+
+    def __init__(self):
+        self._rr = 0
+        self.trace: List[tuple] = []    # (t, node_id)
+
+    def pick(self, now: float, nodes: Sequence[NodeSimulator]) -> NodeSimulator:
+        k = self._rr % len(nodes)
+        self._rr += 1
+        order = list(nodes[k:]) + list(nodes[:k])
+        node = min(order, key=lambda nd: nd.router_load())
+        self.trace.append((now, node.node_id))
+        return node
+
+
+class ClusterSimulator:
+    """N ``NodeSimulator`` nodes on one clock under a facility power budget."""
+
+    def __init__(self, cfg: ModelConfig, policy: StaticPolicy, n_nodes: int,
+                 node_budget_w: float = 4800.0,
+                 facility_budget_w: Optional[float] = None,
+                 ctrl_cfg: Optional[ControllerConfig] = None,
+                 cluster_cfg: Optional[ClusterConfig] = None,
+                 gpu: GPUSpec = MI300X, power: Optional[PowerModel] = None,
+                 coalesced: bool = False, seed: int = 0,
+                 policies: Optional[Sequence[StaticPolicy]] = None,
+                 node_budgets: Optional[Sequence[float]] = None):
+        self.loop = EventLoop()
+        budgets = list(node_budgets) if node_budgets else \
+            [node_budget_w] * n_nodes
+        assert len(budgets) == n_nodes
+        self.facility_budget_w = facility_budget_w or float(sum(budgets))
+        assert sum(budgets) <= self.facility_budget_w + 1e-6
+        pols = list(policies) if policies else [policy] * n_nodes
+        self.nodes = [
+            NodeSimulator(cfg, pols[i], node_budget_w=budgets[i], gpu=gpu,
+                          power=power, ctrl_cfg=ctrl_cfg, coalesced=coalesced,
+                          seed=seed + i, loop=self.loop, node_id=i)
+            for i in range(n_nodes)
+        ]
+        self.router = PowerAwareRouter()
+        self.ccfg = cluster_cfg or ClusterConfig()
+        self.records: List[RequestRecord] = []
+        self.shift_trace: List[tuple] = []    # (t, src, dst, watts)
+        self.budget_trace: List[tuple] = []   # (t, [budgets], total)
+        self._inflight: set = set()           # node ids with a budget op
+        self._last_shift_t = -1e9
+
+    # ---------------- invariants ----------------
+    def assert_facility_invariant(self):
+        """Worst-case facility accounting: in-flight budget shrinks count at
+        the old (higher) budget, so this must hold at every instant."""
+        total = sum(nd.pm.budget for nd in self.nodes)
+        assert total <= self.facility_budget_w + 1e-6, \
+            (total, self.facility_budget_w)
+        for nd in self.nodes:
+            assert nd.pm._worst_case() <= nd.pm.budget + 1e-6, \
+                (nd.node_id, nd.pm._worst_case(), nd.pm.budget)
+        return total
+
+    # ---------------- event handling ----------------
+    def _handle(self, kind: str, payload=None):
+        now = self.loop.now
+        if kind == "arrival":
+            req, node_id = payload
+            node = (self.nodes[node_id] if node_id is not None
+                    else self.router.pick(now, self.nodes))
+            node.handle("arrival", req)
+        elif kind == "cluster_ctrl":
+            self._on_cluster_ctrl()
+        elif kind == "budget_ready":
+            self._on_budget_ready(*payload)
+        else:
+            raise ValueError(f"unknown cluster event {kind!r}")
+
+    def _on_budget_ready(self, src_id: int, dst_id: int, freed: float):
+        now = self.loop.now
+        src, dst = self.nodes[src_id], self.nodes[dst_id]
+        src.pm.commit_budget(now)
+        absorbed = dst.pm.grow_budget(now, freed)
+        if absorbed < freed - 1e-9:
+            # sink at its ceiling: return the remainder to the source so
+            # facility watts are conserved
+            src.pm.grow_budget(now, freed - absorbed)
+        self._inflight.discard(src_id)
+        self._inflight.discard(dst_id)
+        self.shift_trace.append((now, src_id, dst_id, absorbed))
+        self.assert_facility_invariant()
+
+    def _on_cluster_ctrl(self):
+        now = self.loop.now
+        total = self.assert_facility_invariant()
+        self.budget_trace.append(
+            (now, [nd.pm.budget for nd in self.nodes], total))
+        c = self.ccfg
+        if (c.allow_shift and not self._inflight
+                and now - self._last_shift_t >= c.cooldown_s):
+            stresses = [nd.stress_summary() for nd in self.nodes]
+            dst = max(stresses, key=lambda s: s.stress)
+            src = min(stresses, key=lambda s: s.stress)
+            if (dst.node_id != src.node_id
+                    and dst.stress >= c.dst_stress_min
+                    and src.stress <= c.src_stress_max
+                    and dst.stress - src.stress >= c.stress_gap):
+                src_nd = self.nodes[src.node_id]
+                if src_nd.pm.budget - c.shift_step_w >= \
+                        src_nd.pm.budget_floor_w - 1e-9:
+                    t_ready, freed = src_nd.pm.shrink_budget(
+                        now, c.shift_step_w)
+                    if freed > 0:
+                        self._inflight.update((src.node_id, dst.node_id))
+                        self._last_shift_t = now
+                        self.loop.push(t_ready, self._handle, "budget_ready",
+                                       (src.node_id, dst.node_id, freed))
+        if self.loop.heap:
+            self.loop.push(now + c.period_s, self._handle, "cluster_ctrl")
+
+    # ---------------- driving ----------------
+    def _seed_arrivals(self, workload: Optional[Workload],
+                       pinned: Optional[Dict[int, Workload]]):
+        rid = 0
+        streams = []
+        if workload is not None:
+            streams.append((None, workload))
+        for node_id, wl in (pinned or {}).items():
+            streams.append((node_id, wl))
+        assert streams, "no workload given"
+        for node_id, wl in streams:
+            for (t, it, ot, ts, ps) in wl.entries:
+                rec = RequestRecord(rid, t, it, ot, ttft_slo=ts, tpot_slo=ps)
+                rid += 1
+                self.records.append(rec)
+                self.loop.push(t, self._handle, "arrival",
+                               (SimRequest(rec), node_id))
+
+    def n_unfinished(self) -> int:
+        # every record lands in exactly one node via submit(); counters keep
+        # the per-event termination check O(1)
+        return len(self.records) - sum(nd.finished_count for nd in self.nodes)
+
+    def run(self, workload: Optional[Workload] = None,
+            pinned: Optional[Dict[int, Workload]] = None,
+            horizon_s: float = 1e5) -> GoodputSummary:
+        """``workload``: arrivals dispatched by the router. ``pinned``:
+        {node_id: Workload} delivered to that node directly (skewed /
+        heterogeneous per-node experiments). Both may be combined."""
+        self._seed_arrivals(workload, pinned)
+        for nd in self.nodes:
+            nd.start()
+        self.loop.push(0.0, self._handle, "cluster_ctrl")
+        self.loop.run(lambda: self.n_unfinished() == 0, horizon_s)
+        return self.summary()
+
+    def summary(self) -> GoodputSummary:
+        duration = max((r.finish or self.loop.now) for r in self.records) \
+            if self.records else self.loop.now
+        per_node_w = []
+        for nd in self.nodes:
+            if nd.power_samples:
+                per_node_w.append(float(np.mean(
+                    [w for _, w in nd.power_samples])))
+            else:
+                per_node_w.append(sum(nd.pm.effective))
+        return summarize(self.records, duration, float(sum(per_node_w)))
+
+    def node_summaries(self) -> List[GoodputSummary]:
+        return [nd.summary() for nd in self.nodes]
+
+    def node_stresses(self) -> List[NodeStress]:
+        return [nd.stress_summary() for nd in self.nodes]

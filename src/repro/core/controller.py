@@ -54,6 +54,38 @@ class Decision:
     note: str = ""
 
 
+@dataclasses.dataclass
+class NodeStress:
+    """SLO-relative stress of one node, as seen by the cluster coordinator.
+
+    ``stress`` > 1 means the node is violating (or about to violate) an SLO;
+    well below 1 means it has power to spare. The coordinator moves node
+    budget from the least- to the most-stressed node (``core.cluster``)."""
+    node_id: int
+    now: float
+    ttft_p90: float
+    tpot_p90: float
+    q_prefill: int
+    q_decode: int
+    ttft_stress: float              # ttft_p90 / ttft_slo
+    tpot_stress: float              # tpot_p90 / tpot_slo
+
+    @property
+    def stress(self) -> float:
+        return max(self.ttft_stress, self.tpot_stress)
+
+
+def stress_from(obs: Observation, ttft_slo: float, tpot_slo: float,
+                node_id: int = 0) -> NodeStress:
+    return NodeStress(
+        node_id=node_id, now=obs.now,
+        ttft_p90=obs.ttft_p90, tpot_p90=obs.tpot_p90,
+        q_prefill=obs.q_prefill, q_decode=obs.q_decode,
+        ttft_stress=obs.ttft_p90 / max(ttft_slo, 1e-9),
+        tpot_stress=obs.tpot_p90 / max(tpot_slo, 1e-9),
+    )
+
+
 class RapidController:
     """Algorithm 1. Interacts with a cluster through a narrow interface:
     the PowerManager plus role lists (indices of prefill/decode GPUs)."""

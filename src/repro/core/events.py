@@ -1,0 +1,46 @@
+"""Shared discrete-event engine.
+
+``NodeSimulator`` historically owned its own heap; the cluster layer needs
+many nodes advancing on ONE clock so that router decisions, per-node
+controllers, and cluster-level budget shifts interleave correctly. An
+``EventLoop`` is that shared clock + heap: every participant pushes
+``(time, handler, kind, payload)`` and the owner of the loop drives it.
+
+Events at equal timestamps dispatch in push order (a monotonically
+increasing sequence number breaks ties), which preserves the single-node
+simulator's behaviour exactly when it owns a private loop.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional
+
+
+class EventLoop:
+    def __init__(self):
+        self.heap: List[tuple] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def push(self, t: float, handler: Callable[[str, object], None],
+             kind: str, payload=None) -> None:
+        heapq.heappush(self.heap, (t, next(self._seq), kind, handler, payload))
+
+    def peek_time(self) -> Optional[float]:
+        return self.heap[0][0] if self.heap else None
+
+    def step(self) -> float:
+        """Pop the next event, advance the clock, dispatch. Returns its time."""
+        t, _, kind, handler, payload = heapq.heappop(self.heap)
+        self.now = t
+        handler(kind, payload)
+        return t
+
+    def run(self, until: Callable[[], bool], horizon_s: float = 1e5) -> None:
+        """Drive events until ``until()`` is true, the heap empties, or the
+        next event lies beyond ``horizon_s``."""
+        while self.heap and not until():
+            if self.heap[0][0] > horizon_s:
+                break
+            self.step()

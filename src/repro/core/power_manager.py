@@ -42,7 +42,13 @@ class SimulatedSMI(PowerBackend):
 
 class PowerManager:
     """Tracks commanded + effective caps for every GPU; enforces the node
-    budget invariant sum(max(commanded, effective)) <= budget at all times."""
+    budget invariant sum(max(commanded, effective)) <= budget at all times.
+
+    The budget itself is *mutable at runtime* (hierarchical power: a cluster
+    coordinator moves watts between node budgets, ``core.cluster``) with the
+    same source-before-sink discipline one level up: ``shrink_budget`` lowers
+    GPU caps first and only ``commit_budget`` — once those caps are in force —
+    actually releases the watts; ``grow_budget`` raises are immediate."""
 
     def __init__(self, n_gpus: int, node_budget_w: float,
                  backend: Optional[PowerBackend] = None,
@@ -50,6 +56,7 @@ class PowerManager:
                  initial_caps: Optional[List[float]] = None):
         self.n = n_gpus
         self.budget = node_budget_w
+        self._budget_target = node_budget_w   # < budget while a shrink is in flight
         self.backend = backend or SimulatedSMI()
         self.min_cap, self.max_cap = min_cap, max_cap
         caps = initial_caps or [node_budget_w / n_gpus] * n_gpus
@@ -59,12 +66,27 @@ class PowerManager:
         self.effective: List[float] = list(caps)
         self.pending: List[CapChange] = []
         self.history: List[tuple] = []     # (t, gpu, watts)
+        self.budget_history: List[tuple] = []   # (t, budget)
 
     # -- bookkeeping -----------------------------------------------------------
     def _worst_case(self) -> float:
         """Budget-relevant power: for lowering commands still in flight the
         GPU may still draw its old (higher) cap."""
         return sum(max(c, e) for c, e in zip(self.commanded, self.effective))
+
+    def _usable_budget(self) -> float:
+        """Budget that cap *raises* may consume: during an in-flight budget
+        shrink the (lower) target is authoritative, so the node cannot grab
+        back watts it has already promised to the cluster."""
+        return min(self.budget, self._budget_target)
+
+    @property
+    def budget_floor_w(self) -> float:
+        return self.n * self.min_cap
+
+    @property
+    def budget_ceil_w(self) -> float:
+        return self.n * self.max_cap
 
     def tick(self, now: float):
         """Apply pending cap changes that have become effective."""
@@ -90,7 +112,7 @@ class PowerManager:
             # in-flight lowers still count at their old caps, so a raise can
             # never overshoot the node budget (source-before-sink invariant)
             mine = max(old, self.effective[gpu])
-            headroom = self.budget - (self._worst_case() - mine)
+            headroom = self._usable_budget() - (self._worst_case() - mine)
             watts = max(min(watts, headroom), self.min_cap)
             if watts <= old + 1e-9:
                 return now
@@ -140,7 +162,7 @@ class PowerManager:
         """Paper Algorithm 1 line 14: DISTRIBUTEUNIFORMPOWER(AllGPUs).
         Lower-first then raise; returns (t_ready, gpus, per)."""
         gpus = list(range(self.n)) if gpus is None else gpus
-        per = min(self.budget / self.n, self.max_cap)
+        per = min(self._usable_budget() / self.n, self.max_cap)
         t_ready = now
         for g in gpus:
             if self.commanded[g] > per:
@@ -152,6 +174,81 @@ class PowerManager:
         for g in gpus:
             if self.commanded[g] < per:
                 self.set_cap(now, g, per)
+
+    # -- hierarchical budgets (cluster -> node) --------------------------------
+    def shrink_budget(self, now: float, delta_w: float):
+        """First phase of a cluster-level budget move out of this node:
+        lower GPU caps (highest first) until the commanded total fits the
+        shrunk budget, but keep ``self.budget`` — the facility-accounting
+        value — at its old level until ``commit_budget``. Returns
+        ``(t_ready, freed_watts)``; the caller schedules the commit (and the
+        sink node's ``grow_budget``) at ``t_ready``. Mirrors ``shift``'s
+        source-before-sink discipline one level up."""
+        assert abs(self._budget_target - self.budget) < 1e-9, \
+            "budget operation already in flight"
+        target = max(self.budget - delta_w, self.budget_floor_w)
+        freed = self.budget - target
+        if freed <= 1e-9:
+            return now, 0.0
+        self._budget_target = target
+        # pre-existing in-flight lowers still count at their old caps in
+        # _worst_case(); the release may not happen before they land, even
+        # if no *new* cap cuts are needed
+        t_ready = max([now] + [ch.effective_at for ch in self.pending])
+        excess = sum(self.commanded) - target
+        if excess > 1e-9:
+            # level-down water-fill: bring the highest caps to a common level
+            # so the cut spreads evenly instead of gutting one GPU
+            order = sorted(range(self.n), key=lambda i: -self.commanded[i])
+            prefix, level, chosen_k = 0.0, self.min_cap, self.n
+            for k in range(1, self.n + 1):
+                prefix += self.commanded[order[k - 1]]
+                nxt = self.commanded[order[k]] if k < self.n else -1e18
+                level = (prefix - excess) / k
+                if level >= nxt - 1e-12:
+                    chosen_k = k
+                    break
+            level = max(level, self.min_cap)
+            for g in order[:chosen_k]:
+                if self.commanded[g] > level + 1e-9:
+                    t_ready = max(t_ready, self.set_cap(now, g, level))
+        return t_ready, freed
+
+    def commit_budget(self, now: float):
+        """Second phase: the lowered caps are in force; release the watts."""
+        self.tick(now)
+        self.budget = self._budget_target
+        self.budget_history.append((now, self.budget))
+        assert self._worst_case() <= self.budget + 1e-6, \
+            (self._worst_case(), self.budget)
+
+    def grow_budget(self, now: float, delta_w: float) -> float:
+        """Raise this node's budget immediately (safe: more budget cannot
+        violate anything) and water-fill the new headroom across GPU caps so
+        the node can use it right away. Returns the watts actually absorbed
+        (clamped by ``n * max_cap``); the caller returns any remainder to the
+        source node so facility watts are conserved."""
+        assert abs(self._budget_target - self.budget) < 1e-9, \
+            "budget operation already in flight"
+        new = min(self.budget + delta_w, self.budget_ceil_w)
+        absorbed = new - self.budget
+        if absorbed <= 1e-9:
+            return 0.0
+        self.budget = new
+        self._budget_target = new
+        self.budget_history.append((now, self.budget))
+        left = absorbed
+        # least-headroom first: a GPU that clamps at max_cap rolls its
+        # surplus share to the ones that still have room
+        order = sorted(range(self.n),
+                       key=lambda i: self.max_cap - self.commanded[i])
+        for idx, g in enumerate(order):
+            share = left / (self.n - idx)
+            give = min(share, self.max_cap - self.commanded[g])
+            if give > 1e-9:
+                self.set_cap(now, g, self.commanded[g] + give)
+                left -= give
+        return absorbed
 
     def at_limits(self, src: List[int], dst: List[int],
                   dst_max: Optional[float] = None) -> bool:

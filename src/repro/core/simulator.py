@@ -16,17 +16,17 @@ Request lifecycle:
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from collections import deque
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.controller import (ControllerConfig, Decision, Observation,
-                                   RapidController, StaticPolicy)
+from repro.core.controller import (ControllerConfig, Decision, NodeStress,
+                                   Observation, RapidController, StaticPolicy,
+                                   stress_from)
 from repro.core.costmodel import MI300X, CostModel, GPUSpec
+from repro.core.events import EventLoop
 from repro.core.goodput import GoodputSummary, RequestRecord, summarize
 from repro.core.power_manager import PowerManager
 from repro.core.power_model import PowerModel, mi300x
@@ -34,8 +34,8 @@ from repro.core.power_model import PowerModel, mi300x
 RING_SLOTS = 32
 MAX_PREFILL_BATCH_TOKENS = 4096
 MAX_PREFILL_BATCH_REQS = 8
-PREFILL_CHUNK = 512
-CHUNK_PENALTY = 1.0               # chunked-prefill efficiency loss (Sarathi)              # coalesced chunked-prefill chunk size
+PREFILL_CHUNK = 512               # coalesced chunked-prefill chunk size
+CHUNK_PENALTY = 1.0               # chunked-prefill efficiency loss (Sarathi)
 METRIC_WINDOW_S = 5.0
 
 
@@ -44,6 +44,7 @@ class SimRequest:
     rec: RequestRecord
     tokens_out: int = 0
     decode_gpu: Optional[int] = None
+    preregistered: bool = False    # rec already counted in node records
 
     @property
     def rid(self):
@@ -110,12 +111,18 @@ class Workload:
 
 
 class NodeSimulator:
+    """One power-capped 8-GPU node. Owns its queues/roles/power manager;
+    the *clock* is an ``EventLoop`` that may be private (single-node ``run``)
+    or shared with sibling nodes by a cluster simulator (``core.cluster``)."""
+
     def __init__(self, cfg: ModelConfig, policy: StaticPolicy,
                  node_budget_w: float = 4800.0,
                  gpu: GPUSpec = MI300X, power: Optional[PowerModel] = None,
                  ctrl_cfg: Optional[ControllerConfig] = None,
                  coalesced: bool = False, seed: int = 0,
-                 min_cap_w: float = 400.0, max_cap_w: float = 750.0):
+                 min_cap_w: float = 400.0, max_cap_w: float = 750.0,
+                 loop: Optional[EventLoop] = None, node_id: int = 0):
+        self.node_id = node_id
         self.cost = CostModel(cfg, gpu, power or mi300x())
         self.n_gpus = policy.n_prefill + policy.n_decode
         caps = policy.caps()
@@ -133,8 +140,7 @@ class NodeSimulator:
         self.ctrl_cfg = ctrl_cfg
         self.rng = np.random.default_rng(seed)
 
-        self.heap: List[tuple] = []
-        self._seq = itertools.count()
+        self.loop = loop or EventLoop()
         self.q_prefill: deque = deque()
         self.ring_free = RING_SLOTS
         self.ring_wait: deque = deque()
@@ -142,14 +148,18 @@ class NodeSimulator:
         self.recent_ttft: deque = deque()       # (t, value)
         self.recent_tpot: deque = deque()       # decode iteration times
         self.recent_req_tpot: deque = deque()   # completed-request TPOT
-        self.now = 0.0
         self.power_samples: List[tuple] = []    # (t, provisioned, roles)
         self.trace_caps: List[tuple] = []       # (t, caps per gpu, roles)
         self.mixed_rr = 0
+        self.finished_count = 0    # O(1) termination checks for the loop
 
     # ---------------- event plumbing ----------------
+    @property
+    def now(self) -> float:
+        return self.loop.now
+
     def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self.heap, (t, next(self._seq), kind, payload))
+        self.loop.push(t, self.handle, kind, payload)
 
     # ---------------- role lists ----------------
     def prefill_gpus(self) -> List[int]:
@@ -255,6 +265,7 @@ class NodeSimulator:
             r.tokens_out += 1
             if r.tokens_out >= r.rec.output_tokens:
                 r.rec.finish = self.now
+                self.finished_count += 1
                 self.recent_req_tpot.append((self.now, r.rec.tpot))
                 done.append(r)
         gpu.active = [r for r in gpu.active if r.rec.finish is None]
@@ -307,6 +318,7 @@ class NodeSimulator:
                 r.tokens_out += 1
                 if r.tokens_out >= r.rec.output_tokens:
                     r.rec.finish = self.now
+                    self.finished_count += 1
             gpu.active = [r for r in gpu.active if r.rec.finish is None]
         self._kick_mixed(gpu)
 
@@ -334,16 +346,7 @@ class NodeSimulator:
                                 [g.role for g in self.gpus]))
         self.power_samples.append((self.now, sum(self.pm.effective)))
         if self.ctrl is not None and not self.coalesced:
-            obs = Observation(
-                now=self.now,
-                ttft_p90=max(self._window_p90(self.recent_ttft),
-                             self._queue_ttft_estimate()),
-                tpot_p90=max(self._window_p90(self.recent_tpot),
-                             self._window_p90(self.recent_req_tpot)),
-                q_prefill=len(self.q_prefill),
-                q_decode=(sum(len(g.pending_join) for g in self.gpus)
-                          + len(self.ring_wait)),
-            )
+            obs = self.observe()
             pre, dec = self.prefill_gpus(), self.decode_gpus()
             d = self.ctrl.tick(obs, pre, dec)
             if d.kind == "power":
@@ -357,7 +360,7 @@ class NodeSimulator:
                 self._push(t_ready, "power_ready", (list(dst), freed, dst_max))
             elif d.kind == "gpu":
                 self._start_role_switch(d.direction)
-        if self.heap:
+        if self.loop.heap:
             self._push(self.now + (self.ctrl_cfg.min_time_s
                                    if self.ctrl_cfg else 0.25), "ctrl")
 
@@ -407,49 +410,101 @@ class NodeSimulator:
         else:
             self._kick_decode(gpu)
 
+    # ---------------- cluster-facing signals ----------------
+    def queued_prefill_tokens(self) -> int:
+        toks = sum(r.rec.input_tokens for r in self.q_prefill)
+        toks += sum(max(req.rec.input_tokens - done, 0)
+                    for g in self.gpus for req, done in g.mixed_prefill)
+        return toks
+
+    def router_load(self) -> float:
+        """Power-adjusted load signal for the cluster router: estimated time
+        to drain the queued prefill work through this node's prefill GPUs at
+        their *current* caps, plus the queue-head-age early warning (same
+        signal the controller uses via ``_queue_ttft_estimate``)."""
+        pre = self.prefill_gpus() or [g.gid for g in self.gpus
+                                      if not g.draining]
+        if not pre:
+            return float("inf")
+        cap = float(np.mean([self.pm.effective[g] for g in pre]))
+        toks = self.queued_prefill_tokens()
+        t_drain = (self.cost.prefill_time(toks, cap) / len(pre)
+                   if toks else 0.0)
+        return t_drain + self._queue_ttft_estimate()
+
+    def observe(self) -> Observation:
+        """Current controller observation (also the coordinator's view —
+        both MUST see the same metric definition)."""
+        return Observation(
+            now=self.now,
+            ttft_p90=max(self._window_p90(self.recent_ttft),
+                         self._queue_ttft_estimate()),
+            tpot_p90=max(self._window_p90(self.recent_tpot),
+                         self._window_p90(self.recent_req_tpot)),
+            q_prefill=len(self.q_prefill),
+            q_decode=(sum(len(g.pending_join) for g in self.gpus)
+                      + len(self.ring_wait)),
+        )
+
+    def stress_summary(self) -> NodeStress:
+        """SLO-relative stress for the cluster coordinator (works with or
+        without a per-node controller)."""
+        ttft_slo = self.ctrl_cfg.ttft_slo if self.ctrl_cfg else 1.0
+        tpot_slo = self.ctrl_cfg.tpot_slo if self.ctrl_cfg else 0.040
+        return stress_from(self.observe(), ttft_slo, tpot_slo,
+                           node_id=self.node_id)
+
     # ---------------- main loop ----------------
-    def run(self, workload: Workload, horizon_s: float = 1e5) -> GoodputSummary:
-        for i, (t, it, ot, ts, ps) in enumerate(workload.entries):
-            rec = RequestRecord(i, t, it, ot, ttft_slo=ts, tpot_slo=ps)
-            self.records.append(rec)
-            self._push(t, "arrival", SimRequest(rec))
-        self._push(0.0, "ctrl")
-        n_left = len(self.records)
-        while self.heap and n_left > 0:
-            t, _, kind, payload = heapq.heappop(self.heap)
-            if t > horizon_s:
-                break
-            self.now = t
-            self.pm.tick(t)
-            if kind == "arrival":
-                if self.coalesced:
-                    gpu = self.gpus[self.mixed_rr % self.n_gpus]
-                    self.mixed_rr += 1
-                    gpu.mixed_prefill.append((payload, 0))
-                    self._kick_mixed(gpu)
-                else:
-                    self.q_prefill.append(payload)
-                    for gid in self.prefill_gpus():
-                        self._kick_prefill(self.gpus[gid])
-            elif kind == "prefill_done":
-                self._on_prefill_done(*payload)
-            elif kind == "transfer_done":
-                self._on_transfer_done(payload)
-            elif kind == "decode_iter":
-                self._on_decode_iter(*payload)
-            elif kind == "mixed_iter":
-                self._on_mixed_iter(*payload)
-            elif kind == "ctrl":
-                self._on_ctrl()
-            elif kind == "power_ready":
-                dst, freed, dst_max = payload
-                self.pm.apply_raise(self.now, dst, freed, dst_max)
-            elif kind == "uniform_ready":
-                gpus, per = payload
-                self.pm.apply_uniform(self.now, gpus, per)
-            elif kind == "drain_done":
-                self._on_drain_done(payload)
-            n_left = sum(1 for r in self.records if r.finish is None)
+    def submit(self, req: SimRequest):
+        """Accept a request at the current time (called from the arrival
+        event in single-node mode, or by the cluster router)."""
+        if not req.preregistered:
+            self.records.append(req.rec)
+            req.preregistered = True
+        if self.coalesced:
+            gpu = self.gpus[self.mixed_rr % self.n_gpus]
+            self.mixed_rr += 1
+            gpu.mixed_prefill.append((req, 0))
+            self._kick_mixed(gpu)
+        else:
+            self.q_prefill.append(req)
+            for gid in self.prefill_gpus():
+                self._kick_prefill(self.gpus[gid])
+
+    def start(self):
+        """Schedule the periodic control/sampling tick."""
+        self._push(self.loop.now, "ctrl")
+
+    def n_unfinished(self) -> int:
+        return len(self.records) - self.finished_count
+
+    def handle(self, kind: str, payload=None):
+        """Event sink: all node events dispatch through here."""
+        self.pm.tick(self.now)
+        if kind == "arrival":
+            self.submit(payload)
+        elif kind == "prefill_done":
+            self._on_prefill_done(*payload)
+        elif kind == "transfer_done":
+            self._on_transfer_done(payload)
+        elif kind == "decode_iter":
+            self._on_decode_iter(*payload)
+        elif kind == "mixed_iter":
+            self._on_mixed_iter(*payload)
+        elif kind == "ctrl":
+            self._on_ctrl()
+        elif kind == "power_ready":
+            dst, freed, dst_max = payload
+            self.pm.apply_raise(self.now, dst, freed, dst_max)
+        elif kind == "uniform_ready":
+            gpus, per = payload
+            self.pm.apply_uniform(self.now, gpus, per)
+        elif kind == "drain_done":
+            self._on_drain_done(payload)
+        else:
+            raise ValueError(f"unknown event kind {kind!r}")
+
+    def summary(self) -> GoodputSummary:
         duration = max((r.finish or self.now) for r in self.records) if \
             self.records else self.now
         if self.power_samples:
@@ -457,3 +512,16 @@ class NodeSimulator:
         else:
             avg_w = sum(self.pm.effective)
         return summarize(self.records, duration, avg_w)
+
+    def run(self, workload: Workload, horizon_s: float = 1e5) -> GoodputSummary:
+        """Single-node entry point: drives a private event loop to completion
+        (cluster runs are driven by ``core.cluster.ClusterSimulator``).
+        All records are registered upfront so a horizon-truncated run still
+        counts never-arrived requests against SLO attainment."""
+        for i, (t, it, ot, ts, ps) in enumerate(workload.entries):
+            rec = RequestRecord(i, t, it, ot, ttft_slo=ts, tpot_slo=ps)
+            self.records.append(rec)
+            self._push(t, "arrival", SimRequest(rec, preregistered=True))
+        self.start()
+        self.loop.run(lambda: self.n_unfinished() == 0, horizon_s)
+        return self.summary()

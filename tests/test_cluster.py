@@ -1,0 +1,179 @@
+"""Cluster layer: power-aware routing, hierarchical (facility -> node ->
+GPU) budget invariants incl. worst-case accounting during in-flight shifts,
+and end-to-end multi-node behaviour."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.goodput import RequestRecord
+from repro.core.power_manager import PowerManager
+from repro.core.simulator import SimRequest, Workload
+
+CFG = get_config("llama31_8b")
+
+
+def dyn(**kw):
+    return dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=False, **kw)
+
+
+def make_cluster(n_nodes=2, budget=4000.0, ctrl=None, shift=True, **kw):
+    return ClusterSimulator(CFG, policy_4p4d(500), n_nodes,
+                            node_budget_w=budget, ctrl_cfg=ctrl,
+                            cluster_cfg=ClusterConfig(allow_shift=shift),
+                            **kw)
+
+
+# ---------------------------------------------------------------------------
+# router dispatch
+# ---------------------------------------------------------------------------
+
+def test_router_prefers_less_loaded_node():
+    cs = make_cluster()
+    # pile queued prefill work onto node 0 only
+    for i in range(6):
+        cs.nodes[0].submit(SimRequest(RequestRecord(100 + i, 0.0, 8192, 16)))
+    assert cs.nodes[0].router_load() > cs.nodes[1].router_load()
+    picked = {cs.router.pick(0.0, cs.nodes).node_id for _ in range(4)}
+    assert picked == {1}
+
+
+def test_router_round_robins_when_idle():
+    cs = make_cluster(n_nodes=4)
+    picked = [cs.router.pick(0.0, cs.nodes).node_id for _ in range(4)]
+    assert sorted(picked) == [0, 1, 2, 3]
+
+
+def test_routed_arrivals_spread_across_nodes():
+    cs = make_cluster(shift=False)
+    s = cs.run(Workload.longbench_like(80, qps=6.0, seed=0))
+    assert s.n_finished == 80
+    counts = [len(nd.records) for nd in cs.nodes]
+    assert all(c > 0 for c in counts)
+    assert max(counts) - min(counts) <= 40    # no starvation
+
+
+# ---------------------------------------------------------------------------
+# hierarchical budget invariants (PowerManager level)
+# ---------------------------------------------------------------------------
+
+def test_shrink_budget_is_source_before_sink():
+    pm = PowerManager(8, 4000.0, initial_caps=[500.0] * 8)
+    t_ready, freed = pm.shrink_budget(0.0, 400.0)
+    assert freed == pytest.approx(400.0)
+    # watts not released yet: facility accounting still sees the old budget
+    assert pm.budget == pytest.approx(4000.0)
+    assert t_ready > 0.0                       # cap lowering takes time
+    assert sum(pm.commanded) <= 3600.0 + 1e-6  # caps already commanded down
+    pm.tick(t_ready)
+    pm.commit_budget(t_ready)
+    assert pm.budget == pytest.approx(3600.0)
+    assert pm._worst_case() <= pm.budget + 1e-6
+
+
+def test_raise_during_inflight_shrink_respects_target():
+    pm = PowerManager(8, 4000.0, initial_caps=[500.0] * 8)
+    pm.shrink_budget(0.0, 400.0)
+    # a concurrent per-GPU raise may not grab back the promised watts
+    for g in range(8):
+        pm.set_cap(0.05, g, 750.0)
+    assert sum(pm.commanded) <= 3600.0 + 1e-6
+    pm.tick(10.0)
+    pm.commit_budget(10.0)
+    assert pm._worst_case() <= pm.budget + 1e-6
+
+
+def test_shrink_budget_waits_for_inflight_lowers():
+    """Regression: a shrink issued while the node controller's own cap
+    lowers are still in flight must not release the watts before those
+    lowers land — _worst_case() still counts the old caps."""
+    pm = PowerManager(8, 4000.0, initial_caps=[500.0] * 8)
+    for g in range(4):
+        pm.set_cap(10.0, g, 400.0)          # in flight until 10.3
+    t_ready, freed = pm.shrink_budget(10.2, 400.0)
+    assert freed == pytest.approx(400.0)
+    assert t_ready >= 10.3                   # waits for the pending lowers
+    pm.tick(t_ready)
+    pm.commit_budget(t_ready)                # must not trip the invariant
+    assert pm._worst_case() <= pm.budget + 1e-6
+
+
+def test_grow_budget_water_fills_past_capped_gpus():
+    """A GPU clamped at max_cap rolls its share to GPUs with headroom."""
+    pm = PowerManager(2, 1140.0, initial_caps=[400.0, 740.0])
+    absorbed = pm.grow_budget(0.0, 100.0)
+    assert absorbed == pytest.approx(100.0)
+    assert sum(pm.commanded) == pytest.approx(1240.0)
+    assert pm.commanded[1] == pytest.approx(750.0)
+
+
+def test_grow_budget_clamped_by_gpu_ceiling():
+    pm = PowerManager(8, 5900.0, initial_caps=[737.5] * 8)
+    absorbed = pm.grow_budget(0.0, 500.0)
+    assert absorbed == pytest.approx(8 * 750.0 - 5900.0)   # 100 W ceiling room
+    assert pm.budget == pytest.approx(6000.0)
+    assert all(c <= 750.0 + 1e-9 for c in pm.commanded)
+
+
+def test_budget_floor_respected():
+    pm = PowerManager(8, 3300.0, initial_caps=[412.5] * 8)
+    _, freed = pm.shrink_budget(0.0, 1000.0)
+    assert freed == pytest.approx(100.0)       # floor is 8 x 400 W
+    pm.tick(1.0)
+    pm.commit_budget(1.0)
+    assert pm.budget == pytest.approx(3200.0)
+
+
+# ---------------------------------------------------------------------------
+# cluster-level invariant during a real run
+# ---------------------------------------------------------------------------
+
+def test_facility_budget_invariant_under_shifting():
+    cs = make_cluster(ctrl=dyn(ttft_slo=2.0))
+    pinned = {
+        0: Workload.uniform(60, qps=4.0, in_tokens=8192, out_tokens=128,
+                            seed=1, ttft_slo=2.0),
+        1: Workload.uniform(60, qps=4.0, in_tokens=500, out_tokens=500,
+                            seed=2, tpot_slo=0.020),
+    }
+    s = cs.run(pinned=pinned)
+    assert s.n_finished == 120
+    assert len(cs.shift_trace) > 0, "skewed load must trigger budget shifts"
+    # invariant also asserted inside the sim on every tick; re-check trace
+    assert cs.budget_trace
+    for _, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6
+        assert total == pytest.approx(sum(budgets))
+    # watts conserved end-to-end
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(cs.facility_budget_w)
+
+
+def test_cluster_shift_beats_static_budgets_on_skew():
+    def run(shift):
+        cs = make_cluster(ctrl=dyn(ttft_slo=2.0), shift=shift)
+        pinned = {
+            0: Workload.uniform(90, qps=4.0, in_tokens=8192, out_tokens=128,
+                                seed=11, ttft_slo=2.0),
+            1: Workload.uniform(90, qps=4.0, in_tokens=500, out_tokens=500,
+                                seed=12, tpot_slo=0.020),
+        }
+        return cs.run(pinned=pinned)
+    s_static = run(False)
+    s_shift = run(True)
+    assert s_shift.slo_attainment > s_static.slo_attainment
+
+
+# ---------------------------------------------------------------------------
+# smoke sweep
+# ---------------------------------------------------------------------------
+
+def test_two_node_smoke_sweep():
+    for ctrl, shift in ((None, False), (dyn(), False), (dyn(), True)):
+        cs = make_cluster(ctrl=ctrl, shift=shift)
+        s = cs.run(Workload.longbench_like(60, qps=6.0, seed=3))
+        assert s.n_finished == s.n_total == 60
+        assert 0.0 <= s.slo_attainment <= 1.0

@@ -92,6 +92,62 @@ def test_trip_count_multiplication():
     assert mc.loops and mc.loops[0][1] == G
 
 
+_INLINE_SHAPE_HLO = """
+HloModule m
+
+ENTRY %main (p0: f32[4,64], p1: f32[64,96]) -> f32[4,96] {
+  %p0 = f32[4,64]{1,0} parameter(0)
+  %p1 = f32[64,96]{1,0} parameter(1)
+  ROOT %dot.1 = f32[4,96]{1,0} dot(f32[4,64]{1,0:T(8,128)} %p0, f32[64,96]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_dot_parsing_with_inline_operand_shapes():
+    """Regression: the operand regex used to match the dtype token (``f32``)
+    of inline operand shapes, so contraction size collapsed to 1 and dot
+    FLOPs were undercounted by the full contraction dimension. The inline
+    operand shape (here with a TPU tiled layout, which nests parens) must be
+    read directly."""
+    mc = HG.analyze(_INLINE_SHAPE_HLO)
+    assert mc.dot_flops == pytest.approx(2 * 4 * 96 * 64)
+
+
+def test_dot_parsing_falls_back_to_defining_op():
+    txt = """
+HloModule m
+
+ENTRY %main (p0: f32[8,32], p1: f32[32,16]) -> f32[8,16] {
+  %p0 = f32[8,32]{1,0} parameter(0)
+  %p1 = f32[32,16]{1,0} parameter(1)
+  ROOT %dot.2 = f32[8,16]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    mc = HG.analyze(txt)
+    assert mc.dot_flops == pytest.approx(2 * 8 * 16 * 32)
+
+
+def test_async_collective_suffix_stripped_not_rstripped():
+    """``rstrip("-start")`` strips a character *set*; the opcode must lose
+    only a literal ``-start``/``-done`` suffix, and ``-done`` halves of async
+    pairs must not be double-counted."""
+    assert HG._strip_async_suffix("all-reduce-start") == "all-reduce"
+    assert HG._strip_async_suffix("all-reduce-done") == "all-reduce"
+    assert HG._strip_async_suffix("reduce-scatter") == "reduce-scatter"
+    assert HG._strip_async_suffix("all-to-all") == "all-to-all"
+    txt = """
+HloModule m
+
+ENTRY %main (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128]{0} parameter(0)
+  %ar-start = f32[128]{0} all-reduce-start(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %ar-done = f32[128]{0} all-reduce-done(%ar-start)
+}
+"""
+    mc = HG.analyze(txt)
+    assert mc.coll_counts.get("all-reduce") == 1
+
+
 def test_wire_factors():
     assert HG._wire_factor("all-reduce", 16) == pytest.approx(2 * 15 / 16)
     assert HG._wire_factor("all-gather", 16) == pytest.approx(15 / 16)
