@@ -12,8 +12,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster", "roofline",
-          "kernels", "beyond")
+SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
+          "fig10hetero", "roofline", "kernels", "beyond")
 
 
 def main() -> None:
@@ -26,12 +26,13 @@ def main() -> None:
 
     from benchmarks import (beyond_ablations, fig4_power_curves,
                             fig5_static_slo, fig6_queueing, fig7_slo_scaling,
-                            fig8_dynamic, fig9_cluster_scaling, kernels_bench,
-                            roofline)
+                            fig8_dynamic, fig9_cluster_scaling,
+                            fig10_hetero_dyngpu, kernels_bench, roofline)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
         "fig8": fig8_dynamic, "fig9cluster": fig9_cluster_scaling,
+        "fig10hetero": fig10_hetero_dyngpu,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
     }

@@ -1,10 +1,17 @@
-"""Walkthrough: a 2-node cluster under one facility power budget.
+"""Walkthrough: a heterogeneous 2-node cluster under one facility budget,
+with the coordinator managing both node *budgets* and the cluster *role
+mix*.
 
-Node 0 is fed prefill-heavy traffic (8k-token prompts), node 1 decode-heavy
-(long generations). Each node runs the RAPID controller internally
-(per-GPU power shifting); the cluster coordinator moves *node budgets*
-between them with the same source-before-sink discipline one level up, and
-the power-aware router would handle any un-pinned traffic.
+Node 0 is an MI300X node, node 1 an H100 node (~20% slower on an 8k
+prefill). A prefill-heavy routed stream (8k-token prompts at 4 QPS per
+node) stresses the cluster's static-role prefill capacity while node 0
+also serves a pinned decode-heavy stream. Each node runs the RAPID
+controller internally (per-GPU power shifting); the cluster coordinator
+first tries to move *node budgets* (source-before-sink one level up) and —
+once watts are exhausted, because both nodes are stressed — flips decode
+GPUs to prefill on the least-stressed node (MoveGPU at cluster scale).
+The power-aware router dispatches by effective role capacity, so the nodes
+that gained prefill GPUs absorb proportionally more traffic.
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -13,6 +20,7 @@ import dataclasses
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
 from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.costmodel import H100, MI300X
 from repro.core.simulator import Workload
 
 
@@ -24,30 +32,38 @@ def main():
         cfg, policy_4p4d(500), n_nodes=2,
         node_budget_w=4000.0,              # deliberately power-constrained
         ctrl_cfg=ctrl,
-        cluster_cfg=ClusterConfig(allow_shift=True),
+        cluster_cfg=ClusterConfig(allow_shift=True, allow_gpu_move=True),
+        gpu_specs=[MI300X, H100],          # heterogeneous hardware
     )
     print(f"facility budget: {cluster.facility_budget_w:.0f} W "
-          f"({len(cluster.nodes)} nodes x 4000 W)")
+          f"({len(cluster.nodes)} nodes x 4000 W, "
+          f"{' + '.join(nd.cost.gpu.name for nd in cluster.nodes)})")
 
-    prefill_heavy = Workload.uniform(60, qps=4.0, in_tokens=8192,
-                                     out_tokens=128, seed=1,
-                                     ttft_slo=2.0, tpot_slo=0.040)
-    decode_heavy = Workload.uniform(60, qps=4.0, in_tokens=500,
-                                    out_tokens=500, seed=2, tpot_slo=0.020)
-    summary = cluster.run(pinned={0: prefill_heavy, 1: decode_heavy})
+    routed = Workload.uniform(200, qps=8.0, in_tokens=8192, out_tokens=128,
+                              seed=5, ttft_slo=2.0, tpot_slo=0.040)
+    decode_heavy = Workload.uniform(100, qps=2.0, in_tokens=500,
+                                    out_tokens=500, seed=6, tpot_slo=0.030)
+    summary = cluster.run(routed, pinned={0: decode_heavy})
 
     print(f"\ncluster: {summary.row()}")
     for nd, s in zip(cluster.nodes, cluster.node_summaries()):
-        print(f"  node {nd.node_id}: {s.row()}")
+        print(f"  node {nd.node_id} ({nd.cost.gpu.name}): {s.row()}")
         print(f"          budget {nd.pm.budget:.0f} W  "
+              f"roles {''.join(g.role[0].upper() for g in nd.gpus)}  "
               f"caps {[round(c) for c in nd.pm.effective]}")
     print(f"\nbudget shifts ({len(cluster.shift_trace)}):")
     for t, src, dst, w in cluster.shift_trace:
         print(f"  t={t:7.2f}s  node{src} -> node{dst}  {w:.0f} W")
+    print(f"role flips ({len(cluster.flip_trace)} requested, "
+          f"{len(cluster.flip_done_trace)} completed):")
+    for (t, node_id, direction), (td, nid, gid, role) in zip(
+            cluster.flip_trace, cluster.flip_done_trace):
+        print(f"  t={t:7.2f}s  node{node_id} {direction}  ->  "
+              f"gpu{gid} is {role} at t={td:.2f}s")
     total = sum(nd.pm.budget for nd in cluster.nodes)
     print(f"\nfinal node budgets sum {total:.0f} W "
           f"<= facility {cluster.facility_budget_w:.0f} W "
-          f"(invariant held on every coordinator tick)")
+          f"(invariant held on every tick and across every role-flip drain)")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,9 @@
-"""Multi-node cluster simulation: N power-capped nodes under one facility
-budget, a power-aware router, and a cluster coordinator that moves *node
-budgets* the same way ``PowerManager.shift`` moves per-GPU watts.
+"""Multi-node cluster simulation: N power-capped (possibly heterogeneous)
+nodes under one facility budget, a power-aware router, and a cluster
+coordinator that jointly manages node *budgets* (MovePower one level up)
+and node *roles* (MoveGPU one level up).
 
-Two-level power hierarchy (paper Algorithm 1, composed):
+Two-level control hierarchy (paper Algorithm 1, composed):
 
   facility budget
     -> node budgets     (ClusterCoordinator, source-before-sink: the source
@@ -10,16 +11,25 @@ Two-level power hierarchy (paper Algorithm 1, composed):
                          only when they are in force does ``commit_budget``
                          release the watts and the sink ``grow_budget`` them)
     -> per-GPU caps     (per-node PowerManager + RapidController, unchanged)
+  cluster role mix      (ClusterCoordinator: when a stressed node cannot be
+                         relieved by watts alone — its budget at the
+                         facility-fair ceiling, or the source pool exhausted —
+                         flip one GPU toward the starved role on the
+                         least-stressed node that can afford it, with the
+                         same drain discipline the node controller uses)
 
-Invariant asserted every coordinator tick AND after every budget handoff:
-``sum(node budgets) <= facility budget`` with worst-case accounting — a node
-whose budget shrink is still in flight counts at its OLD budget, exactly as
-an in-flight GPU cap lower counts at its old cap.
+Invariant asserted every coordinator tick, after every budget handoff, AND
+at both ends of every role flip (a drain in flight must not perturb the
+budgets): ``sum(node budgets) <= facility budget`` with worst-case
+accounting — a node whose budget shrink is still in flight counts at its
+OLD budget, exactly as an in-flight GPU cap lower counts at its old cap.
 
 All nodes advance on one shared ``EventLoop``; arrivals enter through the
-router (least-power-adjusted-load with a prefill-queue-age early warning,
-mirroring ``NodeSimulator._queue_ttft_estimate``) or pinned per node for
-heterogeneous / skewed workload experiments.
+router (least marginal power-adjusted load against each node's *effective
+role capacity*, so a hot-binned MI300X pool and a smaller H100 pool are
+compared by real token rates) or pinned per node for heterogeneous / skewed
+workload experiments. Role-flip completions travel back to the coordinator
+as ``role_flip`` events published on the shared loop.
 """
 from __future__ import annotations
 
@@ -47,22 +57,31 @@ class ClusterConfig:
     dst_stress_min: float = 1.0     # sink must be (about to be) violating
     src_stress_max: float = 0.9     # source must be comfortably inside SLO
     allow_shift: bool = True        # False: static node budgets (baseline)
+    allow_gpu_move: bool = False    # cluster-scale DynGPU (role flips)
+    gpu_cooldown_s: float = 6.0     # between role flips (drain is costly)
 
 
 class PowerAwareRouter:
-    """Dispatch to the node with the least power-adjusted load. Ties (e.g.
-    an idle cluster) round-robin via a rotating start index so request 0..k
-    don't all pile onto node 0."""
+    """Dispatch to the node with the least marginal power-adjusted load:
+    (queued prefill tokens + this request's tokens) / effective prefill-role
+    capacity, plus the queue-head-age early warning. Capacity-relative
+    dispatch is what makes heterogeneous nodes and in-flight role flips
+    route correctly — a node that just gained a prefill GPU (or has faster
+    ones) absorbs proportionally more traffic. Ties (e.g. an idle
+    homogeneous cluster) round-robin via a rotating start index so request
+    0..k don't all pile onto node 0."""
 
     def __init__(self):
         self._rr = 0
         self.trace: List[tuple] = []    # (t, node_id)
 
-    def pick(self, now: float, nodes: Sequence[NodeSimulator]) -> NodeSimulator:
+    def pick(self, now: float, nodes: Sequence[NodeSimulator],
+             req: Optional[SimRequest] = None) -> NodeSimulator:
         k = self._rr % len(nodes)
         self._rr += 1
         order = list(nodes[k:]) + list(nodes[:k])
-        node = min(order, key=lambda nd: nd.router_load())
+        extra = req.rec.input_tokens if req is not None else 0
+        node = min(order, key=lambda nd: nd.router_load(extra))
         self.trace.append((now, node.node_id))
         return node
 
@@ -78,7 +97,12 @@ class ClusterSimulator:
                  gpu: GPUSpec = MI300X, power: Optional[PowerModel] = None,
                  coalesced: bool = False, seed: int = 0,
                  policies: Optional[Sequence[StaticPolicy]] = None,
-                 node_budgets: Optional[Sequence[float]] = None):
+                 node_budgets: Optional[Sequence[float]] = None,
+                 gpu_specs: Optional[Sequence[GPUSpec]] = None,
+                 powers: Optional[Sequence[PowerModel]] = None):
+        """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
+        clusters (default: every node is ``gpu``; a ``None`` power entry
+        resolves from the node's spec)."""
         self.loop = EventLoop()
         budgets = list(node_budgets) if node_budgets else \
             [node_budget_w] * n_nodes
@@ -86,10 +110,15 @@ class ClusterSimulator:
         self.facility_budget_w = facility_budget_w or float(sum(budgets))
         assert sum(budgets) <= self.facility_budget_w + 1e-6
         pols = list(policies) if policies else [policy] * n_nodes
+        specs = list(gpu_specs) if gpu_specs else [gpu] * n_nodes
+        assert len(specs) == n_nodes
+        pwrs = list(powers) if powers else [power] * n_nodes
+        assert len(pwrs) == n_nodes
         self.nodes = [
-            NodeSimulator(cfg, pols[i], node_budget_w=budgets[i], gpu=gpu,
-                          power=power, ctrl_cfg=ctrl_cfg, coalesced=coalesced,
-                          seed=seed + i, loop=self.loop, node_id=i)
+            NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
+                          gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
+                          coalesced=coalesced, seed=seed + i, loop=self.loop,
+                          node_id=i)
             for i in range(n_nodes)
         ]
         self.router = PowerAwareRouter()
@@ -97,8 +126,13 @@ class ClusterSimulator:
         self.records: List[RequestRecord] = []
         self.shift_trace: List[tuple] = []    # (t, src, dst, watts)
         self.budget_trace: List[tuple] = []   # (t, [budgets], total)
+        self.flip_trace: List[tuple] = []     # (t, node_id, direction) starts
+        self.flip_done_trace: List[tuple] = []  # (t, node_id, gid, new_role)
         self._inflight: set = set()           # node ids with a budget op
         self._last_shift_t = -1e9
+        self._flip_node: Optional[int] = None   # node with a drain in flight
+        self._last_flip_t = -1e9
+        self.loop.subscribe("role_flip", self._on_role_flip)
 
     # ---------------- invariants ----------------
     def assert_facility_invariant(self):
@@ -118,7 +152,7 @@ class ClusterSimulator:
         if kind == "arrival":
             req, node_id = payload
             node = (self.nodes[node_id] if node_id is not None
-                    else self.router.pick(now, self.nodes))
+                    else self.router.pick(now, self.nodes, req))
             node.handle("arrival", req)
         elif kind == "cluster_ctrl":
             self._on_cluster_ctrl()
@@ -141,31 +175,113 @@ class ClusterSimulator:
         self.shift_trace.append((now, src_id, dst_id, absorbed))
         self.assert_facility_invariant()
 
+    def _eligible_sources(self, stresses: List[NodeStress],
+                          dst: NodeStress) -> List[NodeStress]:
+        """Nodes that could give up a budget step right now: comfortably
+        inside SLO, sufficiently less stressed than the sink, and above
+        their budget floor."""
+        c = self.ccfg
+        return [s for s in stresses
+                if s.node_id != dst.node_id
+                and s.stress <= c.src_stress_max
+                and dst.stress - s.stress >= c.stress_gap
+                and (self.nodes[s.node_id].pm.budget - c.shift_step_w
+                     >= self.nodes[s.node_id].pm.budget_floor_w - 1e-9)]
+
+    def _fair_ceiling_w(self, node_id: int) -> float:
+        """Most watts this node could ever hold under the facility budget:
+        its own GPU-cap ceiling, or the facility minus every other node's
+        floor — whichever binds first."""
+        others_floor = sum(nd.pm.budget_floor_w for nd in self.nodes
+                           if nd.node_id != node_id)
+        return min(self.nodes[node_id].pm.budget_ceil_w,
+                   self.facility_budget_w - others_floor)
+
+    def _watts_exhausted(self, stresses: List[NodeStress],
+                         dst: NodeStress) -> bool:
+        """True when budget shifting cannot relieve ``dst`` any further:
+        shifting disabled, the sink already at its facility-fair ceiling,
+        or no source node has watts to give."""
+        if not self.ccfg.allow_shift:
+            return True
+        dst_nd = self.nodes[dst.node_id]
+        if dst_nd.pm.budget >= self._fair_ceiling_w(dst.node_id) - 1e-6:
+            return True
+        return not self._eligible_sources(stresses, dst)
+
+    def _try_budget_shift(self, now: float, stresses: List[NodeStress],
+                          dst: NodeStress) -> bool:
+        """MovePower at cluster scale: shrink the least-stressed eligible
+        source's budget; watts land on the sink at ``budget_ready``."""
+        c = self.ccfg
+        dst_nd = self.nodes[dst.node_id]
+        if dst_nd.pm.budget >= self._fair_ceiling_w(dst.node_id) - 1e-6:
+            return False            # sink cannot absorb another step
+        sources = self._eligible_sources(stresses, dst)
+        if not sources:
+            return False
+        src = min(sources, key=lambda s: s.stress)
+        t_ready, freed = self.nodes[src.node_id].pm.shrink_budget(
+            now, c.shift_step_w)
+        if freed <= 0:
+            return False
+        self._inflight.update((src.node_id, dst.node_id))
+        self._last_shift_t = now
+        self.loop.push(t_ready, self._handle, "budget_ready",
+                       (src.node_id, dst.node_id, freed))
+        return True
+
+    def _try_role_flip(self, now: float, stresses: List[NodeStress],
+                       dst: NodeStress) -> bool:
+        """MoveGPU at cluster scale: flip one GPU toward the role ``dst``
+        is starved for, on the least-stressed node that can afford to lose
+        one of the opposite role. The flip changes no budgets — the node
+        re-levels its own caps after the drain — so the facility invariant
+        must hold throughout; assert it at the start and (via the
+        ``role_flip`` event) at the end of the drain."""
+        direction = "d2p" if dst.hot_role == "prefill" else "p2d"
+        for s in sorted(stresses, key=lambda s: s.stress):
+            if self.nodes[s.node_id].request_role_flip(direction):
+                self._flip_node = s.node_id
+                self._last_flip_t = now
+                self.flip_trace.append((now, s.node_id, direction))
+                self.assert_facility_invariant()
+                return True
+        return False
+
+    def _on_role_flip(self, payload):
+        """A node completed a role flip: re-assert the facility invariant at
+        the exact completion instant. Only coordinator-requested flips
+        (``external=True``) clear the one-flip-at-a-time slot and land in
+        ``flip_done_trace`` — a node controller's own concurrent role switch
+        must not release the coordinator's in-flight drain early."""
+        node_id, gid, new_role, external = payload
+        if external:
+            if self._flip_node == node_id:
+                self._flip_node = None
+            self.flip_done_trace.append(
+                (self.loop.now, node_id, gid, new_role))
+        self.assert_facility_invariant()
+
     def _on_cluster_ctrl(self):
         now = self.loop.now
         total = self.assert_facility_invariant()
         self.budget_trace.append(
             (now, [nd.pm.budget for nd in self.nodes], total))
         c = self.ccfg
-        if (c.allow_shift and not self._inflight
-                and now - self._last_shift_t >= c.cooldown_s):
+        if c.allow_shift or c.allow_gpu_move:
             stresses = [nd.stress_summary() for nd in self.nodes]
             dst = max(stresses, key=lambda s: s.stress)
-            src = min(stresses, key=lambda s: s.stress)
-            if (dst.node_id != src.node_id
-                    and dst.stress >= c.dst_stress_min
-                    and src.stress <= c.src_stress_max
-                    and dst.stress - src.stress >= c.stress_gap):
-                src_nd = self.nodes[src.node_id]
-                if src_nd.pm.budget - c.shift_step_w >= \
-                        src_nd.pm.budget_floor_w - 1e-9:
-                    t_ready, freed = src_nd.pm.shrink_budget(
-                        now, c.shift_step_w)
-                    if freed > 0:
-                        self._inflight.update((src.node_id, dst.node_id))
-                        self._last_shift_t = now
-                        self.loop.push(t_ready, self._handle, "budget_ready",
-                                       (src.node_id, dst.node_id, freed))
+            if dst.stress >= c.dst_stress_min:
+                shifted = False
+                if (c.allow_shift and not self._inflight
+                        and now - self._last_shift_t >= c.cooldown_s):
+                    shifted = self._try_budget_shift(now, stresses, dst)
+                if (not shifted and c.allow_gpu_move
+                        and self._flip_node is None
+                        and now - self._last_flip_t >= c.gpu_cooldown_s
+                        and self._watts_exhausted(stresses, dst)):
+                    self._try_role_flip(now, stresses, dst)
         if self.loop.heap:
             self.loop.push(now + c.period_s, self._handle, "cluster_ctrl")
 

@@ -74,6 +74,13 @@ class NodeStress:
     def stress(self) -> float:
         return max(self.ttft_stress, self.tpot_stress)
 
+    @property
+    def hot_role(self) -> str:
+        """Role the node is starved for: TTFT stress means prefill capacity
+        is short, TPOT stress means decode capacity is short. Drives the
+        direction of a cluster-level MoveGPU."""
+        return "prefill" if self.ttft_stress >= self.tpot_stress else "decode"
+
 
 def stress_from(obs: Observation, ttft_slo: float, tpot_slo: float,
                 node_id: int = 0) -> NodeStress:

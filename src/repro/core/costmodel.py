@@ -25,7 +25,7 @@ class GPUSpec:
     peak_flops: float            # bf16, dense
     hbm_bw: float                # bytes/s
     hbm_bytes: float
-    link_bw: float               # intra-node per-pair (XGMI / ICI)
+    link_bw: float               # intra-node per-pair (XGMI / ICI / NVLink)
     # serving-efficiency calibration (vLLM-style single-GPU TP=1 serving,
     # includes scheduler/launch inefficiency; see EXPERIMENTS.md §Calibration)
     # prefill MFU saturates with batch tokens: mfu(n) = mfu_max*n/(n+n_half),
@@ -37,13 +37,23 @@ class GPUSpec:
     overhead_prefill_s: float = 0.03   # per prefill batch
     overhead_decode_s: float = 0.006   # per decode iteration
     max_active_decode: int = 64        # vLLM max_num_seqs-style cap
+    # power envelope: cap range the vendor tool accepts, and the name of the
+    # calibrated PowerCurve set (``core.power_model.get_power_model``) —
+    # heterogeneous clusters resolve per-node curves from the node's spec
+    min_cap_w: float = 400.0
+    max_cap_w: float = 750.0
+    power: str = "mi300x"
 
 
 MI300X = GPUSpec("mi300x", peak_flops=1307e12, hbm_bw=5.3e12,
                  hbm_bytes=192e9, link_bw=64e9)
+H100 = GPUSpec("h100", peak_flops=989e12, hbm_bw=3.35e12,
+               hbm_bytes=80e9, link_bw=450e9,
+               min_cap_w=300.0, max_cap_w=700.0, power="h100")
 TPU_V5E = GPUSpec("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
                   hbm_bytes=16e9, link_bw=50e9, mfu_prefill=0.15,
-                  mbu_decode=0.48)
+                  mbu_decode=0.48,
+                  min_cap_w=110.0, max_cap_w=200.0, power="tpu_v5e")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,12 +9,18 @@ controllers, and cluster-level budget shifts interleave correctly. An
 Events at equal timestamps dispatch in push order (a monotonically
 increasing sequence number breaks ties), which preserves the single-node
 simulator's behaviour exactly when it owns a private loop.
+
+The loop also carries a synchronous publish/subscribe channel: a node can
+announce a state change (e.g. a role-flip drain starting or completing)
+without knowing whether a cluster coordinator is listening. Subscribers run
+inline at the publishing event's timestamp, so invariants can be asserted
+at the exact instant the state changes.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 
 class EventLoop:
@@ -22,6 +28,14 @@ class EventLoop:
         self.heap: List[tuple] = []
         self._seq = itertools.count()
         self.now = 0.0
+        self._subs: Dict[str, List[Callable]] = {}
+
+    def subscribe(self, topic: str, fn: Callable[[object], None]) -> None:
+        self._subs.setdefault(topic, []).append(fn)
+
+    def publish(self, topic: str, payload=None) -> None:
+        for fn in self._subs.get(topic, []):
+            fn(payload)
 
     def push(self, t: float, handler: Callable[[str, object], None],
              kind: str, payload=None) -> None:

@@ -88,6 +88,11 @@ class PowerManager:
     def budget_ceil_w(self) -> float:
         return self.n * self.max_cap
 
+    @property
+    def budget_op_inflight(self) -> bool:
+        """A budget shrink has been issued but not yet committed."""
+        return abs(self._budget_target - self.budget) > 1e-9
+
     def tick(self, now: float):
         """Apply pending cap changes that have become effective."""
         still = []
@@ -184,7 +189,7 @@ class PowerManager:
         ``(t_ready, freed_watts)``; the caller schedules the commit (and the
         sink node's ``grow_budget``) at ``t_ready``. Mirrors ``shift``'s
         source-before-sink discipline one level up."""
-        assert abs(self._budget_target - self.budget) < 1e-9, \
+        assert not self.budget_op_inflight, \
             "budget operation already in flight"
         target = max(self.budget - delta_w, self.budget_floor_w)
         freed = self.budget - target
@@ -228,7 +233,7 @@ class PowerManager:
         the node can use it right away. Returns the watts actually absorbed
         (clamped by ``n * max_cap``); the caller returns any remainder to the
         source node so facility watts are conserved."""
-        assert abs(self._budget_target - self.budget) < 1e-9, \
+        assert not self.budget_op_inflight, \
             "budget operation already in flight"
         new = min(self.budget + delta_w, self.budget_ceil_w)
         absorbed = new - self.budget

@@ -74,6 +74,21 @@ def mi300x() -> PowerModel:
     )
 
 
+def h100() -> PowerModel:
+    """H100 SXM (300-700 W cap range). Same compute/memory asymmetry as
+    MI300X: SM clocks track the power knob almost to TBP (prefill ~1.8x for
+    300->700 W), HBM3 bandwidth saturates early (decode ~1.4x, >=90% of the
+    gain by ~550 W). Used for the heterogeneous multi-vendor cluster
+    experiments (fig10)."""
+    return PowerModel(
+        name="h100",
+        prefill=PowerCurve(a=0.95, tau=190.0, p_min=300.0, p_max=700.0),
+        decode=PowerCurve(a=0.38, tau=85.0, p_min=300.0, p_max=700.0),
+        idle_w=70.0,
+        enforce_latency_s=0.3,
+    )
+
+
 def tpu_v5e_group() -> PowerModel:
     """TPU adaptation: an 8-chip v5e group treated as the 'node'. Per-chip
     envelope ~200 W scaled; prefill ~ linear in clock (compute term), decode
@@ -88,4 +103,4 @@ def tpu_v5e_group() -> PowerModel:
 
 
 def get_power_model(name: str) -> PowerModel:
-    return {"mi300x": mi300x, "tpu_v5e": tpu_v5e_group}[name]()
+    return {"mi300x": mi300x, "h100": h100, "tpu_v5e": tpu_v5e_group}[name]()

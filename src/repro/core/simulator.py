@@ -29,7 +29,7 @@ from repro.core.costmodel import MI300X, CostModel, GPUSpec
 from repro.core.events import EventLoop
 from repro.core.goodput import GoodputSummary, RequestRecord, summarize
 from repro.core.power_manager import PowerManager
-from repro.core.power_model import PowerModel, mi300x
+from repro.core.power_model import PowerModel, get_power_model
 
 RING_SLOTS = 32
 MAX_PREFILL_BATCH_TOKENS = 4096
@@ -120,15 +120,21 @@ class NodeSimulator:
                  gpu: GPUSpec = MI300X, power: Optional[PowerModel] = None,
                  ctrl_cfg: Optional[ControllerConfig] = None,
                  coalesced: bool = False, seed: int = 0,
-                 min_cap_w: float = 400.0, max_cap_w: float = 750.0,
+                 min_cap_w: Optional[float] = None,
+                 max_cap_w: Optional[float] = None,
                  loop: Optional[EventLoop] = None, node_id: int = 0):
         self.node_id = node_id
-        self.cost = CostModel(cfg, gpu, power or mi300x())
+        # power curves and the cap range both default from the GPU spec, so a
+        # heterogeneous cluster gets per-node envelopes without extra plumbing
+        self.cost = CostModel(cfg, gpu, power or get_power_model(gpu.power))
         self.n_gpus = policy.n_prefill + policy.n_decode
         caps = policy.caps()
         assert sum(caps) <= node_budget_w + 1e-6, (caps, node_budget_w)
         self.pm = PowerManager(self.n_gpus, node_budget_w, initial_caps=caps,
-                               min_cap=min_cap_w, max_cap=max_cap_w)
+                               min_cap=min_cap_w if min_cap_w is not None
+                               else gpu.min_cap_w,
+                               max_cap=max_cap_w if max_cap_w is not None
+                               else gpu.max_cap_w)
         self.coalesced = coalesced
         if coalesced:
             self.gpus = [GPU(i, "mixed") for i in range(self.n_gpus)]
@@ -152,6 +158,7 @@ class NodeSimulator:
         self.trace_caps: List[tuple] = []       # (t, caps per gpu, roles)
         self.mixed_rr = 0
         self.finished_count = 0    # O(1) termination checks for the loop
+        self._ext_flip_gids: set = set()   # coordinator-requested drains
 
     # ---------------- event plumbing ----------------
     @property
@@ -364,12 +371,40 @@ class NodeSimulator:
             self._push(self.now + (self.ctrl_cfg.min_time_s
                                    if self.ctrl_cfg else 0.25), "ctrl")
 
-    def _start_role_switch(self, direction: str):
+    def can_flip(self, direction: str) -> bool:
+        """Whether a role flip in ``direction`` would leave the node with at
+        least the configured minimum of source-role GPUs."""
+        if self.coalesced:
+            return False
+        if direction == "d2p":
+            return len(self.decode_gpus()) > (self.ctrl_cfg.min_decode_gpus
+                                              if self.ctrl_cfg else 1)
+        return len(self.prefill_gpus()) > (self.ctrl_cfg.min_prefill_gpus
+                                           if self.ctrl_cfg else 1)
+
+    def request_role_flip(self, direction: str) -> bool:
+        """Externally-requested MoveGPU (cluster coordinator): start draining
+        one GPU toward the opposite role. Same drain discipline as the node
+        controller's own GPU moves; completion is announced on the shared
+        loop as a ``role_flip`` event with ``external=True`` so the
+        coordinator can tell its own flips from the node controller's.
+        Returns False if refused (coalesced node or at the role minimum)."""
+        if not self.can_flip(direction):
+            return False
+        gid = self._start_role_switch(direction)
+        if gid is None:
+            return False
+        self._ext_flip_gids.add(gid)
+        return True
+
+    def _start_role_switch(self, direction: str) -> Optional[int]:
+        """Pick and drain one GPU toward the opposite role; returns its gid
+        (or None if refused at the role minimum)."""
         if direction == "d2p":
             cands = self.decode_gpus()
             if len(cands) <= (self.ctrl_cfg.min_decode_gpus
                               if self.ctrl_cfg else 1):
-                return
+                return None
             gid = min(cands, key=lambda i: len(self.gpus[i].active))
             gpu = self.gpus[gid]
             gpu.draining = True
@@ -388,13 +423,14 @@ class NodeSimulator:
             cands = self.prefill_gpus()
             if len(cands) <= (self.ctrl_cfg.min_prefill_gpus
                               if self.ctrl_cfg else 1):
-                return
+                return None
             gid = min(cands, key=lambda i: self.gpus[i].busy)
             gpu = self.gpus[gid]
             gpu.draining = True
             if not gpu.busy:
                 self._push(self.now + self._drain_s(), "drain_done", gid)
             # else drain scheduled on prefill completion
+        return gid
 
     def _on_drain_done(self, gid: int):
         gpu = self.gpus[gid]
@@ -405,6 +441,14 @@ class NodeSimulator:
         # Algorithm 1 line 14: uniform power after a GPU move
         t_ready, gpus, per = self.pm.distribute_uniform(self.now)
         self._push(t_ready, "uniform_ready", (gpus, per))
+        # announce the completed flip (cluster coordinator, if any, clears
+        # its in-flight tracking and re-asserts the facility invariant);
+        # external=True iff this drain was coordinator-requested, so its
+        # completion is never confused with a node-controller flip
+        external = gid in self._ext_flip_gids
+        self._ext_flip_gids.discard(gid)
+        self.loop.publish("role_flip", (self.node_id, gid, gpu.role,
+                                        external))
         if gpu.role == "prefill":
             self._kick_prefill(gpu)
         else:
@@ -417,20 +461,34 @@ class NodeSimulator:
                     for g in self.gpus for req, done in g.mixed_prefill)
         return toks
 
-    def router_load(self) -> float:
-        """Power-adjusted load signal for the cluster router: estimated time
-        to drain the queued prefill work through this node's prefill GPUs at
-        their *current* caps, plus the queue-head-age early warning (same
-        signal the controller uses via ``_queue_ttft_estimate``)."""
+    def prefill_capacity_tps(self) -> float:
+        """Effective prefill-role capacity: aggregate token rate of the
+        non-draining prefill GPUs at their *current* caps, through this
+        node's own cost model — so a 4-GPU H100 pool and a 4-GPU MI300X pool
+        report their real (different) rates, and a mid-drain role flip is
+        reflected the moment the GPU leaves the role list. The rate is
+        amortized over a full prefill batch so per-batch overhead is
+        counted once, like the scheduler pays it."""
         pre = self.prefill_gpus() or [g.gid for g in self.gpus
                                       if not g.draining]
-        if not pre:
+        return sum(
+            MAX_PREFILL_BATCH_TOKENS /
+            self.cost.prefill_time(MAX_PREFILL_BATCH_TOKENS,
+                                   self.pm.effective[g])
+            for g in pre)
+
+    def router_load(self, extra_tokens: int = 0) -> float:
+        """Power-adjusted load signal for the cluster router: estimated time
+        to drain the queued prefill work (plus ``extra_tokens`` of the
+        arriving request, making the signal a *marginal* cost) through this
+        node's effective role capacity, plus the queue-head-age early
+        warning (same signal the controller uses via
+        ``_queue_ttft_estimate``)."""
+        rate = self.prefill_capacity_tps()
+        if rate <= 0.0:
             return float("inf")
-        cap = float(np.mean([self.pm.effective[g] for g in pre]))
-        toks = self.queued_prefill_tokens()
-        t_drain = (self.cost.prefill_time(toks, cap) / len(pre)
-                   if toks else 0.0)
-        return t_drain + self._queue_ttft_estimate()
+        toks = self.queued_prefill_tokens() + extra_tokens
+        return toks / rate + self._queue_ttft_estimate()
 
     def observe(self) -> Observation:
         """Current controller observation (also the coordinator's view —

@@ -1,6 +1,7 @@
-"""Cluster layer: power-aware routing, hierarchical (facility -> node ->
-GPU) budget invariants incl. worst-case accounting during in-flight shifts,
-and end-to-end multi-node behaviour."""
+"""Cluster layer: power-aware routing (capacity-relative, heterogeneous),
+hierarchical (facility -> node -> GPU) budget invariants incl. worst-case
+accounting during in-flight shifts, cluster-scale role rebalancing
+(DynGPU), and end-to-end multi-node behaviour."""
 import dataclasses
 
 import pytest
@@ -8,6 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
 from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.costmodel import H100, MI300X
 from repro.core.goodput import RequestRecord
 from repro.core.power_manager import PowerManager
 from repro.core.simulator import SimRequest, Workload
@@ -20,10 +22,12 @@ def dyn(**kw):
                                allow_gpu=False, **kw)
 
 
-def make_cluster(n_nodes=2, budget=4000.0, ctrl=None, shift=True, **kw):
+def make_cluster(n_nodes=2, budget=4000.0, ctrl=None, shift=True,
+                 gpu_move=False, **kw):
     return ClusterSimulator(CFG, policy_4p4d(500), n_nodes,
                             node_budget_w=budget, ctrl_cfg=ctrl,
-                            cluster_cfg=ClusterConfig(allow_shift=shift),
+                            cluster_cfg=ClusterConfig(
+                                allow_shift=shift, allow_gpu_move=gpu_move),
                             **kw)
 
 
@@ -45,6 +49,47 @@ def test_router_round_robins_when_idle():
     cs = make_cluster(n_nodes=4)
     picked = [cs.router.pick(0.0, cs.nodes).node_id for _ in range(4)]
     assert sorted(picked) == [0, 1, 2, 3]
+
+
+def test_router_tiebreak_start_rotates():
+    """Ties break at a rotating start index: an idle homogeneous cluster is
+    an all-way tie every pick, so consecutive picks must walk the nodes in
+    order rather than re-picking node 0."""
+    cs = make_cluster(n_nodes=3)
+    picked = [cs.router.pick(0.0, cs.nodes).node_id for _ in range(6)]
+    assert picked == [0, 1, 2, 0, 1, 2]
+
+
+def test_router_load_is_capacity_relative_across_specs():
+    """Equal queued work must weigh heavier on the weaker node: an H100
+    prefill pool is slower on an 8k prompt than an MI300X pool, so its
+    drain estimate — and hence its router load — is larger."""
+    cs = make_cluster(gpu_specs=[MI300X, H100])
+    for i in range(6):   # 4 prefill GPUs go busy, 2 requests stay queued
+        cs.nodes[0].submit(SimRequest(RequestRecord(100 + i, 0.0, 8192, 16)))
+        cs.nodes[1].submit(SimRequest(RequestRecord(200 + i, 0.0, 8192, 16)))
+    assert cs.nodes[0].prefill_capacity_tps() > \
+        cs.nodes[1].prefill_capacity_tps()
+    assert cs.nodes[1].router_load() > cs.nodes[0].router_load()
+
+
+def test_hetero_routing_with_pinned_arrivals():
+    """Pinned arrivals bypass the router entirely; routed traffic lands
+    capacity-proportionally, i.e. mostly on the faster MI300X node even
+    though the pinned stream keeps that node busier in absolute terms."""
+    cs = make_cluster(gpu_specs=[MI300X, H100], shift=False)
+    routed = Workload.uniform(60, qps=6.0, in_tokens=8192, out_tokens=32,
+                              seed=4, ttft_slo=2.0)
+    pinned = {1: Workload.uniform(20, qps=2.0, in_tokens=500, out_tokens=64,
+                                  seed=5)}
+    s = cs.run(routed, pinned=pinned)
+    assert s.n_finished == 80
+    assert len(cs.router.trace) == 60        # pinned never hit the router
+    routed_counts = [0, 0]
+    for _, node_id in cs.router.trace:
+        routed_counts[node_id] += 1
+    assert routed_counts[0] > routed_counts[1]   # faster pool absorbs more
+    assert len(cs.nodes[1].records) == routed_counts[1] + 20
 
 
 def test_routed_arrivals_spread_across_nodes():
@@ -165,6 +210,119 @@ def test_cluster_shift_beats_static_budgets_on_skew():
     s_static = run(False)
     s_shift = run(True)
     assert s_shift.slo_attainment > s_static.slo_attainment
+
+
+# ---------------------------------------------------------------------------
+# cluster-scale DynGPU (role rebalancing)
+# ---------------------------------------------------------------------------
+
+def test_request_role_flip_drains_and_publishes():
+    from repro.core.simulator import NodeSimulator
+    sim = NodeSimulator(CFG, policy_4p4d(500), node_budget_w=4000.0)
+    events = []
+    sim.loop.subscribe("role_flip", events.append)
+    assert sim.can_flip("d2p")
+    assert sim.request_role_flip("d2p")
+    # the draining GPU leaves the role list immediately (capacity signals
+    # and the controller must not count it), flips only after the drain
+    assert len(sim.decode_gpus()) == 3
+    while sim.loop.heap and not events:
+        sim.loop.step()
+    node_id, gid, role, external = events[0]
+    assert (node_id, role, external) == (0, "prefill", True)
+    assert len(sim.prefill_gpus()) == 5
+    # flips are refused at the role minimum
+    for _ in range(5):
+        sim.request_role_flip("d2p")
+        while sim.loop.heap:
+            sim.loop.step()
+    assert len(sim.decode_gpus()) == 1
+    assert not sim.can_flip("d2p")
+    assert not sim.request_role_flip("d2p")
+
+
+def test_internal_flip_does_not_clear_coordinator_slot():
+    """Regression: a node controller's own role switch publishes the same
+    ``role_flip`` topic but with ``external=False`` — it must not release
+    the coordinator's one-flip-at-a-time slot or pollute the paired
+    flip_done_trace."""
+    cs = make_cluster(ctrl=dyn(), gpu_move=True)
+    cs._flip_node = 0                   # coordinator drain notionally in flight
+    gid = cs.nodes[0]._start_role_switch("d2p")   # node-internal origin
+    assert gid is not None
+    while cs.loop.heap:
+        cs.loop.step()
+    assert cs._flip_node == 0
+    assert cs.flip_done_trace == []
+
+
+def test_coordinator_flips_roles_when_watts_exhausted():
+    """Skewed hetero load with both nodes stressed: the budget pool dries
+    up, so the coordinator must reach for MoveGPU — and every requested
+    flip must complete and be accounted in the final role mix."""
+    cs = make_cluster(gpu_specs=[MI300X, H100], ctrl=dyn(ttft_slo=2.0),
+                      gpu_move=True)
+    routed = Workload.uniform(100, qps=8.0, in_tokens=8192, out_tokens=128,
+                              seed=5, ttft_slo=2.0)
+    pinned = {0: Workload.uniform(50, qps=2.0, in_tokens=500, out_tokens=500,
+                                  seed=6, tpot_slo=0.030)}
+    s = cs.run(routed, pinned=pinned)
+    assert s.n_finished == 150
+    assert len(cs.flip_trace) > 0, "watts-exhausted skew must trigger flips"
+    assert len(cs.flip_done_trace) == len(cs.flip_trace)
+    net_d2p = sum(1 if d == "d2p" else -1 for _, _, d in cs.flip_trace)
+    total_prefill = sum(
+        sum(1 for g in nd.gpus if g.role == "prefill") for nd in cs.nodes)
+    assert total_prefill == 8 + net_d2p
+    # role flips move no watts: facility budget conserved end-to-end
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(cs.facility_budget_w)
+
+
+def test_cluster_dyngpu_at_least_matches_static_on_skewed_hetero():
+    def run(ctrl, shift, gpu_move):
+        cs = make_cluster(gpu_specs=[MI300X, H100], ctrl=ctrl, shift=shift,
+                          gpu_move=gpu_move)
+        routed = Workload.uniform(120, qps=8.0, in_tokens=8192,
+                                  out_tokens=128, seed=5, ttft_slo=2.0)
+        pinned = {0: Workload.uniform(60, qps=2.0, in_tokens=500,
+                                      out_tokens=500, seed=6,
+                                      tpot_slo=0.030)}
+        return cs.run(routed, pinned=pinned)
+    s_static = run(None, False, False)
+    s_dyngpu = run(dyn(ttft_slo=2.0), True, True)
+    assert s_dyngpu.slo_attainment >= s_static.slo_attainment
+
+
+def test_facility_invariant_across_inflight_role_flip():
+    """Regression: a role-flip drain overlapping a cluster budget handoff
+    on the SAME node must keep the facility invariant at every event — the
+    post-drain uniform redistribution has to respect the in-flight (lower)
+    budget target, not the not-yet-committed old budget."""
+    cs = make_cluster(ctrl=dyn(ttft_slo=2.0), gpu_move=True)
+    pinned = {0: Workload.uniform(30, qps=4.0, in_tokens=8192,
+                                  out_tokens=128, seed=1, ttft_slo=2.0),
+              1: Workload.uniform(30, qps=4.0, in_tokens=500,
+                                  out_tokens=500, seed=2, tpot_slo=0.020)}
+    cs._seed_arrivals(None, pinned)
+    for nd in cs.nodes:
+        nd.start()
+    cs.loop.push(0.0, cs._handle, "cluster_ctrl")
+    # start a role flip on node 1, then yank 200 W of its budget mid-drain
+    assert cs.nodes[1].request_role_flip("d2p")
+    t_ready, freed = cs.nodes[1].pm.shrink_budget(0.0, 200.0)
+    assert freed > 0 and cs.nodes[1].pm.budget_op_inflight
+    cs.loop.push(t_ready, cs._handle, "budget_ready", (1, 0, freed))
+    cs._inflight.update((0, 1))
+    flipped = []
+    cs.loop.subscribe("role_flip", flipped.append)
+    while cs.loop.heap and cs.n_unfinished() > 0:
+        cs.loop.step()
+        cs.assert_facility_invariant()
+    assert flipped, "the drain must complete while budgets moved"
+    assert not cs.nodes[1].pm.budget_op_inflight
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(cs.facility_budget_w)
 
 
 # ---------------------------------------------------------------------------
