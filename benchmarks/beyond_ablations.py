@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import save_artifact
+from benchmarks.common import Timer, save_artifact
 from repro.configs import get_config
 from repro.core.controller import ControllerConfig, StaticPolicy, policy_4p4d
 from repro.core.costmodel import TPU_V5E
@@ -109,13 +109,14 @@ def rack_scale(fast=False):
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     out = {
         "tpu_projection": tpu_projection(fast),
         "cooldown": cooldown_ablation(fast),
         "queue_threshold": queue_threshold_ablation(fast),
         "rack_scale": rack_scale(fast),
     }
-    save_artifact("beyond_ablations", out)
+    save_artifact("beyond_ablations", out, timer=tm.stop())
     return out["cooldown"]
 
 

@@ -10,6 +10,7 @@ from repro.configs import get_config
 from repro.core.controller import (ControllerConfig, StaticPolicy,
                                    policy_4p4d, policy_5p3d,
                                    policy_nonuniform)
+from repro.core.events import EventLoop
 from repro.core.simulator import NodeSimulator, Workload
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
@@ -27,9 +28,18 @@ def sim_run(policy, workload, *, budget=NODE_BUDGET_W, ctrl=None,
     return sim, summary
 
 
-def save_artifact(name: str, payload):
+def save_artifact(name: str, payload, timer: "Timer" = None):
+    """Write one benchmark's JSON artifact. When a ``Timer`` is passed, the
+    artifact gains ``wall_s`` and ``sim_events`` (simulator events
+    dispatched while it ran) so the perf trajectory of every figure is
+    recorded in the BENCH_*.json history, not just its derived metrics."""
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, f"{name}.json")
+    if timer is not None:
+        if not isinstance(payload, dict):
+            payload = {"rows": payload}
+        payload = {**payload, "wall_s": round(timer.dt, 3),
+                   "sim_events": timer.events}
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path
@@ -43,9 +53,24 @@ def dyn_ctrl(tpot_slo=0.040, *, power=True, gpu=True, **kw) -> ControllerConfig:
 
 
 class Timer:
+    """Wall-clock + simulator-event counter (process-wide dispatch total
+    delta), so benchmark artifacts can report events/sec."""
+
     def __enter__(self):
         self.t0 = time.perf_counter()
+        self.ev0 = EventLoop.dispatched_total
+        self.dt = 0.0
+        self.events = 0
         return self
 
     def __exit__(self, *a):
         self.dt = time.perf_counter() - self.t0
+        self.events = EventLoop.dispatched_total - self.ev0
+
+    # non-context-manager form, for mains that save mid-flow
+    def start(self) -> "Timer":
+        return self.__enter__()
+
+    def stop(self) -> "Timer":
+        self.__exit__()
+        return self

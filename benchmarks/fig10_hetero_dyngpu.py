@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import dyn_ctrl, save_artifact
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
 from repro.core.controller import policy_4p4d
@@ -110,8 +110,9 @@ def sweep(fast: bool):
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     rows = sweep(fast)
-    save_artifact("fig10_hetero_dyngpu", {"sweep": rows})
+    save_artifact("fig10_hetero_dyngpu", {"sweep": rows}, timer=tm.stop())
     return rows
 
 

@@ -7,7 +7,7 @@ beyond ~600 W (1.3-1.5x); cap changes enforce in O(100 ms).
 """
 from __future__ import annotations
 
-from benchmarks.common import save_artifact
+from benchmarks.common import Timer, save_artifact
 from repro.configs import get_config
 from repro.core.costmodel import MI300X, CostModel
 from repro.core.power_manager import PowerManager, SimulatedSMI
@@ -17,6 +17,7 @@ CAPS = list(range(400, 751, 50))
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     cfg = get_config("llama31_8b")
     cm = CostModel(cfg, MI300X, mi300x())
     rows = []
@@ -51,7 +52,7 @@ def main(fast: bool = False):
     print(f"  during ramp (t=0.1): {caps_during} (sum {sum(caps_during):.0f})")
     print(f"  after raise (t=0.3): {caps_after} (sum {sum(caps_after):.0f})")
     assert sum(caps_after) <= 4800.0 + 1e-6
-    save_artifact("fig4_power_curves", {"curves": rows,
+    save_artifact("fig4_power_curves", timer=tm.stop(), payload={"curves": rows,
                                         "enforce_latency_s": 0.3})
     return rows
 

@@ -59,6 +59,7 @@ def knee(rows, config, threshold=0.8):
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     n = 500 if fast else N_REQ
     rates = (1.0, 1.25, 1.5) if fast else QPS_PER_GPU
     rows_a = run(0.040, n, rates)
@@ -87,7 +88,8 @@ def main(fast: bool = False):
     for name, *_ in CONFIGS:
         vals = [r["slo_attainment"] for r in rows_b if r["config"] == name]
         print(f"{name:>18s} | " + " | ".join(f"{v*100:5.1f}" for v in vals))
-    save_artifact("fig5_static_slo", {"tpot40": rows_a, "tpot25": rows_b})
+    save_artifact("fig5_static_slo", {"tpot40": rows_a, "tpot25": rows_b},
+                  timer=tm.stop())
     return rows_a, rows_b
 
 

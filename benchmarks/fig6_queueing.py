@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import save_artifact, sim_run
+from benchmarks.common import Timer, save_artifact, sim_run
 from repro.core.controller import policy_4p4d, policy_nonuniform
 from repro.core.simulator import MAX_PREFILL_BATCH_TOKENS, Workload
 from repro.configs import get_config
@@ -17,6 +17,7 @@ from repro.core.power_model import mi300x
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     cfg = get_config("llama31_8b")
     cm = CostModel(cfg, MI300X, mi300x())
     exec_600 = cm.prefill_time(MAX_PREFILL_BATCH_TOKENS, 600)
@@ -49,7 +50,7 @@ def main(fast: bool = False):
              / max(out["4P-750W/4D-450W"]["p90_queue_delay_s"], 1e-9))
     print(f"queueing-delay blow-up (600W/non-uniform): x{ratio:.1f} "
           f"(paper: 'increases dramatically')")
-    save_artifact("fig6_queueing", out)
+    save_artifact("fig6_queueing", out, timer=tm.stop())
     return out
 
 

@@ -6,7 +6,7 @@ Validates: the non-uniform power configuration matches the 6000W
 """
 from __future__ import annotations
 
-from benchmarks.common import NODE_BUDGET_W, save_artifact, sim_run
+from benchmarks.common import NODE_BUDGET_W, Timer, save_artifact, sim_run
 from repro.core.controller import policy_4p4d, policy_nonuniform
 from repro.core.simulator import Workload
 
@@ -14,6 +14,7 @@ SCALES = (2.0, 1.5, 1.0, 0.75, 0.5)
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     n = 400 if fast else 800
     rates = (1.25,) if fast else (1.25, 1.375, 1.5)
     rows = []
@@ -34,7 +35,7 @@ def main(fast: bool = False):
                          "nonuniform": vals[2]})
             print(f"  {sc:4.2f}x | {vals[0]*100:8.1f}% | {vals[1]*100:8.1f}% "
                   f"| {vals[2]*100:8.1f}%")
-    save_artifact("fig7_slo_scaling", rows)
+    save_artifact("fig7_slo_scaling", rows, timer=tm.stop())
     return rows
 
 

@@ -1,6 +1,8 @@
 """Cluster scaling (beyond the paper's single node): 1/2/4/8 nodes under a
-facility power budget, LongBench + two-phase Sonnet workloads, three power
-regimes per point:
+facility power budget, LongBench + two-phase Sonnet workloads — plus a
+``--fleet`` mode (32 nodes, 22k requests, mixed longbench/sonnet arrival
+phases) that the macro-stepped simulator core makes tractable. Three power
+regimes per scaling point:
 
   static        fixed per-node budgets, fixed per-GPU caps
   DynPower      fixed per-node budgets, RAPID power shifting inside each node
@@ -19,9 +21,11 @@ the regime where moving watts between nodes matters.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import time
 
-from benchmarks.common import dyn_ctrl, save_artifact
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
 from repro.core.controller import StaticPolicy, policy_4p4d
@@ -129,12 +133,63 @@ def skew_experiment(fast: bool):
     return rows
 
 
-def main(fast: bool = False):
-    rows = scaling_sweep(fast)
-    skew = skew_experiment(fast)
-    save_artifact("fig9_cluster_scaling", {"scaling": rows, "skew": skew})
+def fleet_experiment(fast: bool):
+    """Fleet scale: 32 nodes under one facility budget serving mixed
+    longbench/sonnet arrival phases (22k requests). Each regime simulates
+    ~0.7M decode iterations across 256 GPUs — intractable with one heap
+    event per iteration (the pre-macro-step core managed ~8 nodes x 250
+    requests in the same wall budget); with macro-stepping the whole
+    scenario runs in tens of seconds."""
+    n_nodes = 32
+    n_per_node = 200 if fast else 500
+    qps = QPS_PER_NODE["longbench"] * n_nodes
+    lb = Workload.longbench_like(n_per_node * n_nodes, qps=qps, seed=17)
+    sonnet = Workload.sonnet_phases(
+        QPS_PER_NODE["sonnet"] * n_nodes, seed=18,
+        n1=n_per_node * n_nodes // 5, n2=n_per_node * n_nodes // 5)
+    wl = Workload.phased_mix([lb, sonnet], name="fleet-mix")
+    rows = {}
+    for reg_name, ctrl, shift in (("static", None, False),
+                                  ("DynPower+cluster",
+                                   dyn_ctrl(gpu=False), True)):
+        t0 = time.perf_counter()
+        cs, s = _run(n_nodes, wl, ctrl=ctrl, shift=shift, seed=17)
+        wall = time.perf_counter() - t0
+        iters = sum(nd.decode_iters for nd in cs.nodes)
+        rows[reg_name] = {
+            "nodes": n_nodes, "requests": len(wl.entries),
+            "slo_attainment": s.slo_attainment,
+            "goodput_rps": s.goodput_rps,
+            "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+            "qps_per_kw": s.qps_per_kw,
+            "budget_shifts": len(cs.shift_trace),
+            "decode_iters": iters, "wall_s": round(wall, 2),
+            "sim_s": round(cs.loop.now, 1),
+        }
+        print(f"fleet n={n_nodes} reqs={len(wl.entries)}  {reg_name:17s} "
+              f"att={s.slo_attainment*100:5.1f}%  "
+              f"goodput={s.goodput_rps:6.2f} req/s  "
+              f"iters={iters}  wall={wall:.1f}s")
+    if not fast:
+        assert rows["static"]["requests"] >= 20_000
+    return rows
+
+
+def main(fast: bool = False, fleet: bool = False):
+    with Timer() as tm:
+        rows = scaling_sweep(fast)
+        skew = skew_experiment(fast)
+        payload = {"scaling": rows, "skew": skew}
+        if fleet:
+            payload["fleet"] = fleet_experiment(fast)
+    save_artifact("fig9_cluster_scaling", payload, timer=tm)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--fleet", action="store_true",
+                    help="32-node, 22k-request mixed-phase fleet scenario")
+    args = ap.parse_args()
+    main(fast=args.fast, fleet=args.fleet)

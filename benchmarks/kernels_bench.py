@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import save_artifact
+from benchmarks.common import Timer, save_artifact
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.rglru_scan.ops import rglru_scan
@@ -26,6 +26,7 @@ def timeit(fn, *args, n=3, **kw):
 
 
 def main(fast: bool = False):
+    tm = Timer().start()
     key = jax.random.key(0)
     rows = []
     # flash attention
@@ -49,7 +50,7 @@ def main(fast: bool = False):
     rows.append(("rglru_scan", us_p, us_r))
     for name, us_p, us_r in rows:
         print(f"{name:18s} pallas(interpret) {us_p:10.0f}us  jnp-ref {us_r:10.0f}us")
-    save_artifact("kernels_bench", [
+    save_artifact("kernels_bench", timer=tm.stop(), payload=[
         {"kernel": n, "pallas_interpret_us": p, "ref_us": r}
         for n, p, r in rows])
     return rows

@@ -1,8 +1,10 @@
-"""Benchmark driver: one module per paper figure/table + roofline + kernels.
+"""Benchmark driver: one module per paper figure/table + roofline + kernels
++ the simulator-throughput benchmark (``simperf``).
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--fleet] [--only fig5,...]
 
+``--fleet`` additionally runs fig9's 32-node / 22k-request fleet scenario.
 Prints ``name,seconds,derived`` CSV lines at the end.
 """
 from __future__ import annotations
@@ -13,13 +15,15 @@ import time
 import traceback
 
 SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
-          "fig10hetero", "roofline", "kernels", "beyond")
+          "fig10hetero", "simperf", "roofline", "kernels", "beyond")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="reduced request counts / rate grids")
+    ap.add_argument("--fleet", action="store_true",
+                    help="include fig9's 32-node fleet scenario")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
@@ -27,12 +31,13 @@ def main() -> None:
     from benchmarks import (beyond_ablations, fig4_power_curves,
                             fig5_static_slo, fig6_queueing, fig7_slo_scaling,
                             fig8_dynamic, fig9_cluster_scaling,
-                            fig10_hetero_dyngpu, kernels_bench, roofline)
+                            fig10_hetero_dyngpu, kernels_bench, roofline,
+                            sim_throughput)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
         "fig8": fig8_dynamic, "fig9cluster": fig9_cluster_scaling,
-        "fig10hetero": fig10_hetero_dyngpu,
+        "fig10hetero": fig10_hetero_dyngpu, "simperf": sim_throughput,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
     }
@@ -44,7 +49,9 @@ def main() -> None:
         print(f"\n===== {name} =====", flush=True)
         t0 = time.perf_counter()
         try:
-            out = mods[name].main(fast=args.fast)
+            kw = {"fleet": True} if (args.fleet and name == "fig9cluster") \
+                else {}
+            out = mods[name].main(fast=args.fast, **kw)
             n = len(out) if hasattr(out, "__len__") else 1
             results.append((name, time.perf_counter() - t0, n))
         except Exception:

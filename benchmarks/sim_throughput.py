@@ -1,0 +1,137 @@
+"""Simulator-throughput benchmark: the perf trajectory of the sim core.
+
+Unlike the fig* modules (which measure the *modeled system*), this measures
+the *simulator itself* on two fixed workloads, under both fidelities:
+
+  single-node   one 8-GPU node, LongBench-like traffic, DynPower controller
+  cluster       8 nodes under DynPower + cluster budget shifting, a
+                long-generation fleet mix (the regime fig9 --fleet runs in)
+
+For each (scenario, fidelity) it reports wall seconds, dispatched events,
+simulated decode iterations, events/sec, decode-iters/sec, and simulated
+seconds per wall second. The macro arm must beat the per-iteration arm by
+``MIN_CLUSTER_SPEEDUP`` on the cluster scenario in full mode, and both arms
+must produce identical goodput summaries (the full golden-equivalence test
+lives in tests/test_sim_macrostep.py).
+
+CI runs ``--fast`` with ``--min-iters-per-sec`` as an order-of-magnitude
+regression floor (generous: shared runners are slow; the floor catches a
+10x collapse, not noise).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import StaticPolicy, policy_4p4d
+from repro.core.simulator import NodeSimulator, Workload
+
+MIN_CLUSTER_SPEEDUP = 5.0       # acceptance floor, full mode only
+
+CFG = "llama31_8b"
+
+
+def _node_run(fidelity: str, fast: bool):
+    n = 150 if fast else 600
+    wl = Workload.longbench_like(n, qps=9.0, seed=3)
+    sim = NodeSimulator(get_config(CFG), policy_4p4d(600),
+                        ctrl_cfg=dyn_ctrl(gpu=False), seed=3,
+                        fidelity=fidelity)
+    t0, c0 = time.perf_counter(), time.process_time()
+    s = sim.run(wl)
+    wall, cpu = time.perf_counter() - t0, time.process_time() - c0
+    return wall, cpu, sim.loop.dispatched, sim.decode_iters, sim.loop.now, s
+
+
+def _cluster_run(fidelity: str, fast: bool):
+    n_nodes = 2 if fast else 8
+    n = 300 if fast else 2000
+    # long-generation fleet regime: a 2P/6D split spreads decode over many
+    # small continuous batches, so per-request decode runs are long and
+    # iteration events dominate — the shape fig9 --fleet studies, and the
+    # worst case for a per-iteration event core (~1.1M decode iterations)
+    wl = Workload.uniform(n, qps=0.7 * n_nodes, in_tokens=2000,
+                          out_tokens=1500, seed=3)
+    cs = ClusterSimulator(get_config(CFG), StaticPolicy(2, 6, 500, 500),
+                          n_nodes, node_budget_w=4000.0,
+                          ctrl_cfg=dyn_ctrl(gpu=False),
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          seed=3, fidelity=fidelity)
+    t0, c0 = time.perf_counter(), time.process_time()
+    s = cs.run(wl)
+    wall, cpu = time.perf_counter() - t0, time.process_time() - c0
+    iters = sum(nd.decode_iters for nd in cs.nodes)
+    return wall, cpu, cs.loop.dispatched, iters, cs.loop.now, s
+
+
+def _row(name, fidelity, wall, cpu, events, iters, sim_s, summary):
+    row = {
+        "scenario": name, "fidelity": fidelity,
+        "wall_s": round(wall, 4),
+        "cpu_s": round(cpu, 4),
+        "events": events,
+        "decode_iters": iters,
+        "sim_s": round(sim_s, 2),
+        "events_per_s": round(events / wall, 1),
+        "iters_per_s": round(iters / wall, 1),
+        "sim_s_per_wall_s": round(sim_s / wall, 1),
+        "slo_attainment": summary.slo_attainment,
+        "goodput_rps": summary.goodput_rps,
+    }
+    print(f"{name:12s} {fidelity:5s} wall {wall:7.2f}s  "
+          f"events {events:8d}  iters/s {row['iters_per_s']:10,.0f}  "
+          f"sim-s/wall-s {row['sim_s_per_wall_s']:7.1f}")
+    return row
+
+
+def main(fast: bool = False, min_iters_per_sec: float = 0.0):
+    rows = []
+    speedups = {}
+    with Timer() as tm:
+        for name, runner in (("single-node", _node_run),
+                             ("cluster", _cluster_run)):
+            per_fid = {}
+            for fidelity in ("iter", "macro"):
+                wall, cpu, events, iters, sim_s, s = runner(fidelity, fast)
+                per_fid[fidelity] = (cpu, s)
+                rows.append(_row(name, fidelity, wall, cpu, events, iters,
+                                 sim_s, s))
+            # same-workload arms must agree exactly — a standing check on
+            # macro-step equivalence in every benchmark run (the full
+            # per-request golden test lives in tests/test_sim_macrostep.py)
+            assert dataclasses.asdict(per_fid["iter"][1]) == \
+                dataclasses.asdict(per_fid["macro"][1]), \
+                f"{name}: macro summary diverged from per-iteration fidelity"
+            # speedup on CPU time: robust against container descheduling
+            # noise, which otherwise dominates the short macro arm
+            speedups[name] = per_fid["iter"][0] / per_fid["macro"][0]
+            print(f"{name:12s} macro speedup {speedups[name]:.2f}x")
+    if not fast:
+        assert speedups["cluster"] >= MIN_CLUSTER_SPEEDUP, \
+            (f"macro-stepping must give >= {MIN_CLUSTER_SPEEDUP}x on the "
+             f"cluster workload, got {speedups['cluster']:.2f}x")
+    macro_cluster = next(r for r in rows
+                         if r["scenario"] == "cluster"
+                         and r["fidelity"] == "macro")
+    if min_iters_per_sec:
+        assert macro_cluster["iters_per_s"] >= min_iters_per_sec, \
+            (f"simulated decode iters/s regressed by an order of magnitude: "
+             f"{macro_cluster['iters_per_s']:.0f} < {min_iters_per_sec:.0f}")
+    payload = {"rows": rows,
+               "speedup": {k: round(v, 2) for k, v in speedups.items()}}
+    save_artifact("sim_throughput", payload, timer=tm)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--min-iters-per-sec", type=float, default=0.0,
+                    help="assert a floor on macro cluster decode-iters/sec "
+                         "(generous; catches order-of-magnitude regressions)")
+    args = ap.parse_args()
+    main(fast=args.fast, min_iters_per_sec=args.min_iters_per_sec)

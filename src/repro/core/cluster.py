@@ -99,10 +99,13 @@ class ClusterSimulator:
                  policies: Optional[Sequence[StaticPolicy]] = None,
                  node_budgets: Optional[Sequence[float]] = None,
                  gpu_specs: Optional[Sequence[GPUSpec]] = None,
-                 powers: Optional[Sequence[PowerModel]] = None):
+                 powers: Optional[Sequence[PowerModel]] = None,
+                 fidelity: str = "macro"):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
-        resolves from the node's spec)."""
+        resolves from the node's spec). ``fidelity``: forwarded to every
+        node — ``"macro"`` (default, event-coalesced decode) or ``"iter"``
+        (one event per decode iteration; the golden-equivalence path)."""
         self.loop = EventLoop()
         budgets = list(node_budgets) if node_budgets else \
             [node_budget_w] * n_nodes
@@ -118,9 +121,10 @@ class ClusterSimulator:
             NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
                           gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
                           coalesced=coalesced, seed=seed + i, loop=self.loop,
-                          node_id=i)
+                          node_id=i, fidelity=fidelity)
             for i in range(n_nodes)
         ]
+        self.fidelity = fidelity
         self.router = PowerAwareRouter()
         self.ccfg = cluster_cfg or ClusterConfig()
         self.records: List[RequestRecord] = []
@@ -148,18 +152,37 @@ class ClusterSimulator:
 
     # ---------------- event handling ----------------
     def _handle(self, kind: str, payload=None):
+        # cluster events read cross-node state (router loads, stress
+        # summaries, facility accounting): bring every node's macro-stepped
+        # iterations and power manager up to date first, and afterwards cut
+        # short any plan whose GPU cap this event changed (budget grows
+        # raise caps immediately; coordinator flips migrate batches).
+        # Arrivals only read prefill-side queues (event-driven) plus power
+        # caps, so the cheap power-only sync suffices for the router.
         now = self.loop.now
         if kind == "arrival":
+            if self.fidelity == "macro":
+                for nd in self.nodes:
+                    nd.sync_power()
             req, node_id = payload
             node = (self.nodes[node_id] if node_id is not None
                     else self.router.pick(now, self.nodes, req))
             node.handle("arrival", req)
         elif kind == "cluster_ctrl":
+            if self.fidelity == "macro":
+                for nd in self.nodes:
+                    nd.sync()
             self._on_cluster_ctrl()
         elif kind == "budget_ready":
+            if self.fidelity == "macro":
+                for nd in self.nodes:
+                    nd.sync()
             self._on_budget_ready(*payload)
         else:
             raise ValueError(f"unknown cluster event {kind!r}")
+        if self.fidelity == "macro":
+            for nd in self.nodes:
+                nd._validate_plans()
 
     def _on_budget_ready(self, src_id: int, dst_id: int, freed: float):
         now = self.loop.now
@@ -305,8 +328,11 @@ class ClusterSimulator:
 
     def n_unfinished(self) -> int:
         # every record lands in exactly one node via submit(); counters keep
-        # the per-event termination check O(1)
-        return len(self.records) - sum(nd.finished_count for nd in self.nodes)
+        # the per-event termination check O(n_nodes) with no record scans
+        done = 0
+        for nd in self.nodes:
+            done += nd.finished_count
+        return len(self.records) - done
 
     def run(self, workload: Optional[Workload] = None,
             pinned: Optional[Dict[int, Workload]] = None,
@@ -327,8 +353,8 @@ class ClusterSimulator:
         per_node_w = []
         for nd in self.nodes:
             if nd.power_samples:
-                per_node_w.append(float(np.mean(
-                    [w for _, w in nd.power_samples])))
+                per_node_w.append(float(np.mean(np.fromiter(
+                    (w for _, w in nd.power_samples), dtype=np.float64))))
             else:
                 per_node_w.append(sum(nd.pm.effective))
         return summarize(self.records, duration, float(sum(per_node_w)))

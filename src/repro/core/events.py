@@ -24,10 +24,15 @@ from typing import Callable, Dict, List, Optional
 
 
 class EventLoop:
+    # process-wide dispatch counter: benchmarks snapshot it around a run to
+    # report how many events a figure cost (``benchmarks.common.Timer``)
+    dispatched_total: int = 0
+
     def __init__(self):
         self.heap: List[tuple] = []
         self._seq = itertools.count()
         self.now = 0.0
+        self.dispatched = 0            # events dispatched by *this* loop
         self._subs: Dict[str, List[Callable]] = {}
 
     def subscribe(self, topic: str, fn: Callable[[object], None]) -> None:
@@ -48,6 +53,8 @@ class EventLoop:
         """Pop the next event, advance the clock, dispatch. Returns its time."""
         t, _, kind, handler, payload = heapq.heappop(self.heap)
         self.now = t
+        self.dispatched += 1
+        EventLoop.dispatched_total += 1
         handler(kind, payload)
         return t
 

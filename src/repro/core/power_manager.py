@@ -67,6 +67,15 @@ class PowerManager:
         self.pending: List[CapChange] = []
         self.history: List[tuple] = []     # (t, gpu, watts)
         self.budget_history: List[tuple] = []   # (t, budget)
+        # per-GPU change counters, bumped on every command AND every
+        # effective-cap application. The macro-stepped simulator snapshots a
+        # GPU's counter when it plans a run of decode iterations at a fixed
+        # cap; a counter mismatch afterwards means the plan must be cut short
+        # at the next iteration boundary and re-derived from fresh caps.
+        # ``version_total`` aggregates them so the per-event staleness check
+        # is a single comparison.
+        self.cap_version: List[int] = [0] * n_gpus
+        self.version_total = 0
 
     # -- bookkeeping -----------------------------------------------------------
     def _worst_case(self) -> float:
@@ -95,10 +104,14 @@ class PowerManager:
 
     def tick(self, now: float):
         """Apply pending cap changes that have become effective."""
+        if not self.pending:           # hot path: called on every sim event
+            return
         still = []
         for ch in self.pending:
             if ch.effective_at <= now:
                 self.effective[ch.gpu] = ch.watts
+                self.cap_version[ch.gpu] += 1
+                self.version_total += 1
             else:
                 still.append(ch)
         self.pending = still
@@ -124,11 +137,15 @@ class PowerManager:
             # raises take effect immediately (no draw above demand anyway)
             self.commanded[gpu] = watts
             self.effective[gpu] = watts
+            self.cap_version[gpu] += 1
+            self.version_total += 1
             self.history.append((now, gpu, watts))
             return now
         ch = self.backend.set_cap(now, gpu, watts)
         self.commanded[gpu] = watts
         self.pending.append(ch)
+        self.cap_version[gpu] += 1
+        self.version_total += 1
         self.history.append((now, gpu, watts))
         return ch.effective_at
 

@@ -12,10 +12,33 @@ Request lifecycle:
   arrival -> prefill queue -> prefill batch (token budget) -> ring slot ->
   KV transfer (counted against TPOT, paper Section 4) -> decode GPU
   (continuous batching) -> finish.
+
+Macro-stepping (``fidelity="macro"``, the default): a decode GPU's batch
+composition can only change at *event boundaries* — a request finishing, a
+join merging, a drain migrating the batch away, or a power-cap change — so
+between boundaries the per-iteration times are fully determined. Instead of
+one heap event per decode iteration, the simulator plans the whole run of
+iterations up to the next boundary (first finish / pending cap change /
+chunk limit) and schedules ONE ``macro_done`` event at its end. Three rules
+keep it bit-identical to the per-iteration path (``fidelity="iter"``, kept
+for the golden-equivalence test):
+
+  * every event dispatch first *syncs*: iterations whose end time has
+    passed are materialized (token counts, TPOT window entries, power-
+    manager tick) before any handler reads state;
+  * a mid-plan state change that *would* have altered a future iteration
+    (a join arriving, a cap commanded or taking effect, a drain migration)
+    truncates the plan at the in-flight iteration's end — exactly where the
+    per-iteration path would have re-read the world;
+  * per-iteration times inside a plan are computed with the identical
+    float operations the per-iteration path uses (the running context mean
+    is exact integer arithmetic), and end times accumulate sequentially,
+    so every timestamp matches to the last bit.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -37,6 +60,138 @@ MAX_PREFILL_BATCH_REQS = 8
 PREFILL_CHUNK = 512               # coalesced chunked-prefill chunk size
 CHUNK_PENALTY = 1.0               # chunked-prefill efficiency loss (Sarathi)
 METRIC_WINDOW_S = 5.0
+MACRO_CHUNK = 1024                # max decode iterations planned per event
+
+
+class MetricWindow:
+    """Sliding-window metric samples on preallocated numpy buffers: O(1)
+    appends, block extends (macro materialization lands whole iteration
+    runs in one slice assignment), and exact vectorized p90 reads.
+
+    Eviction is order-insensitive (a ``t >= cutoff`` mask), so macro
+    materialization may append per-GPU blocks with interleaved timestamps
+    without any sorting — the surviving multiset, and hence the percentile,
+    is exactly what a time-sorted pop-left eviction would produce. Dead
+    prefixes advance ``head``; storage compacts when the dead span wins.
+
+    ``p90`` mirrors ``np.percentile(..., 90)`` arithmetic exactly (same
+    virtual index, same two-sided lerp) via ``np.partition`` — verified
+    bit-identical — at a fraction of the overhead."""
+
+    __slots__ = ("ts", "vs", "n", "head", "_memo")
+
+    def __init__(self):
+        self.ts = np.empty(256)
+        self.vs = np.empty(256)
+        self.n = 0
+        self.head = 0
+        self._memo = (math.nan, -1, 0.0)    # (cutoff, n, result)
+
+    def _grow(self, need: int) -> None:
+        cap = len(self.ts)
+        while cap < need:
+            cap *= 2
+        ts, vs = np.empty(cap), np.empty(cap)
+        ts[:self.n] = self.ts[:self.n]
+        vs[:self.n] = self.vs[:self.n]
+        self.ts, self.vs = ts, vs
+
+    def append(self, t: float, v: float) -> None:
+        n = self.n
+        if n == len(self.ts):
+            self._grow(n + 1)
+        self.ts[n] = t
+        self.vs[n] = v
+        self.n = n + 1
+
+    def extend(self, ts, vs) -> None:
+        n, k = self.n, len(ts)
+        if n + k > len(self.ts):
+            self._grow(n + k)
+        self.ts[n:n + k] = ts
+        self.vs[n:n + k] = vs
+        self.n = n + k
+
+    def __len__(self) -> int:
+        return self.n - self.head
+
+    def __iter__(self):
+        """(t, v) pairs currently stored (analysis/debug use)."""
+        return zip(self.ts[self.head:self.n].tolist(),
+                   self.vs[self.head:self.n].tolist())
+
+    def p90(self, cutoff: float) -> float:
+        h, n = self.head, self.n
+        if h >= n:
+            return 0.0
+        # co-timed readers (node controller + cluster coordinator at the
+        # same instant) recompute nothing: the alive set is a pure function
+        # of (cutoff, n) — head advances never change it
+        memo = self._memo
+        if cutoff == memo[0] and n == memo[1]:
+            return memo[2]
+        if n - h <= 48:
+            # scalar path: small windows (per-request TTFT/TPOT samples)
+            # are numpy-overhead-bound; identical IEEE arithmetic
+            pairs = [(t, v) for t, v in zip(self.ts[h:n].tolist(),
+                                            self.vs[h:n].tolist())
+                     if t >= cutoff]
+            if not pairs:
+                self.head = n
+                return 0.0
+            vs = sorted(v for _, v in pairs)
+            r = self._lerp90(vs, len(vs))
+        else:
+            alive = self.ts[h:n] >= cutoff
+            k = int(alive.sum())
+            if k == 0:
+                self.head = n
+                return 0.0
+            if k == n - h:
+                vals = self.vs[h:n]
+            else:
+                if not alive[0]:            # advance past the dead prefix
+                    first = int(alive.argmax())
+                    h = self.head = h + first
+                    alive = alive[first:]
+                    if h > 8192 and h * 2 > n:    # compact the dead span
+                        self.ts[:n - h] = self.ts[h:n].copy()
+                        self.vs[:n - h] = self.vs[h:n].copy()
+                        self.n, self.head, h = n - h, 0, 0
+                        n = self.n
+                vals = self.vs[h:n]
+                if k != n - h:
+                    vals = vals[alive]
+            # exact np.percentile(vals, 90), method="linear"
+            if k > 128:
+                virt = 0.9 * (k - 1)
+                j = int(virt)
+                if j + 1 < k:
+                    part = np.partition(vals, (j, j + 1))
+                    a, b = float(part[j]), float(part[j + 1])
+                else:
+                    a = b = float(np.partition(vals, j)[j])
+                g = virt - j
+                d = b - a
+                r = (b - d * (1 - g)) if g >= 0.5 else (a + d * g)
+            else:
+                r = self._lerp90(sorted(vals.tolist()), k)
+        self._memo = (cutoff, n, r)
+        return r
+
+    @staticmethod
+    def _lerp90(vs_sorted, m: int) -> float:
+        """np.percentile(…, 90, method="linear") on a sorted value list —
+        same virtual index and two-sided lerp, bit-identical."""
+        virt = 0.9 * (m - 1)
+        j = int(virt)
+        g = virt - j
+        a = vs_sorted[j]
+        b = vs_sorted[j + 1] if j + 1 < m else a
+        d = b - a
+        if g >= 0.5:
+            return b - d * (1 - g)
+        return a + d * g
 
 
 @dataclasses.dataclass
@@ -45,10 +200,35 @@ class SimRequest:
     tokens_out: int = 0
     decode_gpu: Optional[int] = None
     preregistered: bool = False    # rec already counted in node records
+    # Macro-stepping: ``tokens_out`` is exact only relative to the owning
+    # GPU's ``tok_epoch`` — true count = tokens_out + (gpu.tok_epoch -
+    # tok_mark). Folded back into ``tokens_out`` at every plan boundary
+    # (join/finish/migration), so outside a running plan it is exact.
+    tok_mark: int = 0
 
     @property
     def rid(self):
         return self.rec.rid
+
+
+class MacroPlan:
+    """A planned run of decode iterations at fixed batch composition/cap.
+
+    ``end_times[i]`` is the absolute completion time of planned iteration i
+    (sequentially accumulated floats — identical to per-event scheduling);
+    ``m`` counts iterations already materialized into simulator state.
+    Both arrays are float64 numpy arrays, so materialization lands whole
+    runs into the TPOT window as slice copies and truncation is a view.
+    Plain __slots__ class: one is built per planned run, on the hot path."""
+
+    __slots__ = ("gen", "end_times", "dts", "capv", "m")
+
+    def __init__(self, gen, end_times, dts, capv):
+        self.gen = gen             # matches GPU.gen; stale events ignored
+        self.end_times = end_times
+        self.dts = dts
+        self.capv = capv           # PowerManager.cap_version[gid] snapshot
+        self.m = 0
 
 
 @dataclasses.dataclass
@@ -62,6 +242,20 @@ class GPU:
     iterating: bool = False
     # mixed-mode prefill progress: (req, tokens_done)
     mixed_prefill: deque = dataclasses.field(default_factory=deque)
+    # incremental sum of (input_tokens + tokens_out) over ``active`` — keeps
+    # the per-iteration context mean O(1) instead of rescanning the batch
+    ctx_sum: int = 0
+    # macro-stepping state (fidelity="macro"): ``tok_epoch`` counts decode
+    # iterations this GPU has materialized — advancing it IS the whole
+    # batch's token update (requests fold the delta in at plan boundaries)
+    plan: Optional[MacroPlan] = None
+    gen: int = 0
+    tok_epoch: int = 0
+    # adaptive plan-length hint: ~4x the last realized run length (floor 64,
+    # where the vectorized path takes over), so plan computation is not
+    # wasted when joins keep cutting plans short, but grows geometrically
+    # toward MACRO_CHUNK during long undisturbed decode
+    k_hint: int = 64
 
 
 class Workload:
@@ -109,6 +303,20 @@ class Workload:
         return cls([(float(tt), in_tokens, out_tokens, ttft_slo, tpot_slo)
                     for tt in t], name="uniform")
 
+    @classmethod
+    def phased_mix(cls, workloads: List["Workload"], name="mix"):
+        """Concatenate workloads end-to-end in arrival time (each phase's
+        arrivals are offset by the previous phase's last arrival) — the
+        fleet-scale scenario's mixed longbench/sonnet arrival phases."""
+        entries, offset = [], 0.0
+        for wl in workloads:
+            last = 0.0
+            for (t, it, ot, ts, ps) in wl.entries:
+                entries.append((t + offset, it, ot, ts, ps))
+                last = max(last, t)
+            offset += last
+        return cls(entries, name=name)
+
 
 class NodeSimulator:
     """One power-capped 8-GPU node. Owns its queues/roles/power manager;
@@ -122,7 +330,11 @@ class NodeSimulator:
                  coalesced: bool = False, seed: int = 0,
                  min_cap_w: Optional[float] = None,
                  max_cap_w: Optional[float] = None,
-                 loop: Optional[EventLoop] = None, node_id: int = 0):
+                 loop: Optional[EventLoop] = None, node_id: int = 0,
+                 fidelity: str = "macro"):
+        assert fidelity in ("macro", "iter"), fidelity
+        self.fidelity = fidelity
+        self._macro = fidelity == "macro"
         self.node_id = node_id
         # power curves and the cap range both default from the GPU spec, so a
         # heterogeneous cluster gets per-node envelopes without extra plumbing
@@ -148,17 +360,31 @@ class NodeSimulator:
 
         self.loop = loop or EventLoop()
         self.q_prefill: deque = deque()
+        self.q_prefill_tokens = 0               # incremental token sum
         self.ring_free = RING_SLOTS
         self.ring_wait: deque = deque()
         self.records: List[RequestRecord] = []
-        self.recent_ttft: deque = deque()       # (t, value)
-        self.recent_tpot: deque = deque()       # decode iteration times
-        self.recent_req_tpot: deque = deque()   # completed-request TPOT
+        self.recent_ttft = MetricWindow()       # per-request TTFT samples
+        self.recent_tpot = MetricWindow()       # decode iteration times
+        self.recent_req_tpot = MetricWindow()   # completed-request TPOT
         self.power_samples: List[tuple] = []    # (t, provisioned, roles)
         self.trace_caps: List[tuple] = []       # (t, caps per gpu, roles)
         self.mixed_rr = 0
         self.finished_count = 0    # O(1) termination checks for the loop
+        self.decode_iters = 0      # simulated decode iterations (perf metric)
         self._ext_flip_gids: set = set()   # coordinator-requested drains
+        # incremental sums over ALL active decode requests on this node
+        self._g_ctx_sum = 0
+        self._g_ctx_n = 0
+        # sync fast path: earliest unmaterialized plan end on this node
+        # (lower bound — recomputed on every full scan) and the last seen
+        # power-manager aggregate version (plans need revalidation only
+        # when it moves)
+        self._next_due = math.inf
+        self._capv_seen = 0
+        # role/drain transition counter + capacity cache for the router
+        self._role_version = 0
+        self._cap_tps_cache = None
 
     # ---------------- event plumbing ----------------
     @property
@@ -188,6 +414,7 @@ class NodeSimulator:
             if batch and tokens + nxt.rec.input_tokens > MAX_PREFILL_BATCH_TOKENS:
                 break
             self.q_prefill.popleft()
+            self.q_prefill_tokens -= nxt.rec.input_tokens
             batch.append(nxt)
             tokens += nxt.rec.input_tokens
         if not batch:
@@ -202,7 +429,7 @@ class NodeSimulator:
         gpu.busy = False
         for req in batch:
             req.rec.prefill_done = self.now
-            self.recent_ttft.append((self.now, req.rec.ttft))
+            self.recent_ttft.append(self.now, req.rec.ttft)
             self._ring_enqueue(req)
         if gpu.draining:
             self._push(self.now + self._drain_s(), "drain_done", gid)
@@ -240,42 +467,283 @@ class NodeSimulator:
         self._kick_decode(gpu)
 
     def _global_avg_ctx(self) -> float:
-        ctxs = [r.rec.input_tokens + r.tokens_out
-                for g in self.gpus for r in g.active]
-        return float(np.mean(ctxs)) if ctxs else 1000.0
+        if not self._g_ctx_n:
+            return 1000.0
+        return self._g_ctx_sum / self._g_ctx_n
 
     # ---------------- decode ----------------
     def _avg_ctx(self, gpu: GPU) -> float:
         if not gpu.active:
             return 1.0
-        return float(np.mean([r.rec.input_tokens + r.tokens_out
-                              for r in gpu.active]))
+        return gpu.ctx_sum / len(gpu.active)
+
+    def _merge_pending(self, gpu: GPU):
+        if not gpu.pending_join:
+            return
+        epoch = gpu.tok_epoch
+        for r in gpu.pending_join:
+            r.tok_mark = epoch     # tokens_out is exact for an off-GPU req
+            ctx = r.rec.input_tokens + r.tokens_out
+            gpu.ctx_sum += ctx
+            self._g_ctx_sum += ctx
+        self._g_ctx_n += len(gpu.pending_join)
+        gpu.active.extend(gpu.pending_join)
+        gpu.pending_join.clear()
+
+    @staticmethod
+    def _fold(gpu: GPU, r: SimRequest) -> int:
+        """Fold the GPU's epoch delta into the request's exact token count."""
+        r.tokens_out += gpu.tok_epoch - r.tok_mark
+        r.tok_mark = gpu.tok_epoch
+        return r.tokens_out
+
+    def _remove_finished(self, gpu: GPU):
+        keep = []
+        for r in gpu.active:
+            if r.rec.finish is None:
+                keep.append(r)
+            else:
+                ctx = r.rec.input_tokens + r.tokens_out
+                gpu.ctx_sum -= ctx
+                self._g_ctx_sum -= ctx
+                self._g_ctx_n -= 1
+        gpu.active = keep
 
     def _kick_decode(self, gpu: GPU):
         if gpu.iterating:
+            # a join arriving mid-plan must merge at the end of the
+            # in-flight iteration, exactly where the per-iteration path
+            # would next merge: cut the plan short there
+            if gpu.plan is not None and gpu.pending_join:
+                self._truncate_plan(gpu, self.now)
             return
-        gpu.active.extend(gpu.pending_join)
-        gpu.pending_join.clear()
+        self._merge_pending(gpu)
         if not gpu.active:
             return
         gpu.iterating = True
         cap = self.pm.effective[gpu.gid]
-        dt = self.cost.decode_step_time(len(gpu.active), self._avg_ctx(gpu), cap)
-        self._push(self.now + dt, "decode_iter", (gpu.gid, dt))
+        if self._macro:
+            self._start_macro(gpu, cap)
+        else:
+            dt = self.cost.decode_step_time(len(gpu.active),
+                                            self._avg_ctx(gpu), cap)
+            self._push(self.now + dt, "decode_iter", (gpu.gid, dt))
 
     def _on_decode_iter(self, gid: int, dt: float):
         gpu = self.gpus[gid]
         gpu.iterating = False
-        self.recent_tpot.append((self.now, dt))
-        done = []
+        self.recent_tpot.append(self.now, dt)
+        self.decode_iters += 1
+        done_any = False
         for r in gpu.active:
             r.tokens_out += 1
             if r.tokens_out >= r.rec.output_tokens:
                 r.rec.finish = self.now
                 self.finished_count += 1
-                self.recent_req_tpot.append((self.now, r.rec.tpot))
-                done.append(r)
-        gpu.active = [r for r in gpu.active if r.rec.finish is None]
+                self.recent_req_tpot.append(self.now, r.rec.tpot)
+                done_any = True
+        nb = len(gpu.active)
+        gpu.ctx_sum += nb
+        self._g_ctx_sum += nb
+        if done_any:
+            self._remove_finished(gpu)
+        if gpu.draining and not gpu.active:
+            self._push(self.now + self._drain_s(), "drain_done", gid)
+            return
+        self._kick_decode(gpu)
+
+    # ---------------- macro-stepping ----------------
+    def _start_macro(self, gpu: GPU, cap: float):
+        """Plan the run of decode iterations from now to the next intrinsic
+        boundary (first request completion, pending cap-change effective
+        time, or the chunk limit) and schedule one event at its end."""
+        b = len(gpu.active)
+        epoch = gpu.tok_epoch
+        k = min(r.rec.output_tokens - r.tokens_out - epoch + r.tok_mark
+                for r in gpu.active)
+        # capping below the first finish is sound: a plan end with no
+        # finishing request simply re-plans — an iteration boundary, exactly
+        # where the per-iteration path re-reads the world anyway
+        k = min(max(k, 1), gpu.k_hint, MACRO_CHUNK)
+        e_cap = math.inf               # earliest pending cap change, this GPU
+        for ch in self.pm.pending:
+            if ch.gpu == gpu.gid and ch.effective_at < e_cap:
+                e_cap = ch.effective_at
+        t0 = self.now
+        cost = self.cost
+        # per-iteration times, float-identical to decode_step_time(): the
+        # context mean advances by exactly one token per iteration and
+        # (ctx_sum + i*b)/b is the same correctly-rounded float np.mean
+        # produced from the active list. End times accumulate sequentially
+        # — the same float chain as scheduling each iteration off the
+        # previous event's timestamp.
+        weight = cost._weight_bytes
+        kv_per = cost._kv_per_token
+        bw = cost._decode_bw
+        floor = 2.0 * cost._active_params * max(b, 1) / cost._prefill_flops_s
+        rel = cost.rel("decode", cap)
+        oh = cost.gpu.overhead_decode_s
+        if k <= 24:
+            # scalar path: numpy's fixed per-op overhead loses at short k
+            # (IEEE float64 ops are identical either way)
+            dts = []
+            ends = []
+            t = t0
+            ctx = gpu.ctx_sum
+            for _ in range(k):
+                base = (weight + kv_per * (ctx / b) * b) / bw
+                if base < floor:
+                    base = floor
+                dt = base / rel + oh
+                dts.append(dt)
+                t = t + dt
+                ends.append(t)
+                ctx += b
+                if t >= e_cap and len(ends) < k:
+                    break
+            end_arr = np.array(ends)
+            dt_arr = np.array(dts)
+        else:
+            ctx0 = gpu.ctx_sum
+            # np.arange with step b enumerates ctx0 + i*b exactly (int64)
+            avg = np.arange(ctx0, ctx0 + k * b, b, dtype=np.int64) / b
+            base = (weight + kv_per * avg * b) / bw
+            np.maximum(base, floor, out=base)
+            dt_arr = base / rel + oh
+            # ufunc accumulate is a sequential left fold, so seeding it
+            # with t0 reproduces bit-for-bit the (t += dt) chain of
+            # per-event scheduling (property-tested in the macrostep tests)
+            acc = np.empty(k + 1)
+            acc[0] = t0
+            acc[1:] = dt_arr
+            end_arr = np.cumsum(acc, out=acc)[1:]
+            if e_cap is not math.inf and end_arr[-1] >= e_cap:
+                # keep iterations starting before the cap change: the first
+                # end >= e_cap is the last valid iteration's boundary
+                n = int(end_arr.searchsorted(e_cap, side="left")) + 1
+                end_arr = end_arr[:n]
+                dt_arr = dt_arr[:n]
+        gpu.gen += 1
+        gpu.plan = MacroPlan(gen=gpu.gen, end_times=end_arr, dts=dt_arr,
+                             capv=self.pm.cap_version[gpu.gid])
+        first = end_arr[0]
+        if first < self._next_due:
+            self._next_due = first
+        self._push(float(end_arr[-1]), "macro_done", (gpu.gid, gpu.gen))
+
+    def _materialize(self, gpu: GPU, upto: int) -> float:
+        """Write iterations [plan.m, upto) into simulator state: the GPU
+        token epoch (O(1) for the whole batch), context sums, and
+        TPOT-window entries. Returns the last materialized end time."""
+        p = gpu.plan
+        m = p.m
+        delta = upto - m
+        gpu.tok_epoch += delta
+        nb = len(gpu.active)
+        if nb:
+            add = delta * nb
+            gpu.ctx_sum += add
+            self._g_ctx_sum += add
+        ends, dts = p.end_times, p.dts
+        self.recent_tpot.extend(ends[m:upto], dts[m:upto])
+        self.decode_iters += delta
+        p.m = upto
+        return ends[upto - 1]
+
+    def sync_power(self):
+        """Router-read fidelity on cluster arrivals: the per-iteration path
+        applies pending cap changes at every decode-iteration event, so a
+        cross-node read between an enforcement instant and the next real
+        node event must see the updated caps. With no change in flight
+        (almost always — enforcement windows last 0.3 s after a controller
+        action) the tick is a no-op and this is O(1); otherwise run a full
+        sync, which ticks the power manager to the last elapsed iteration
+        end exactly as the per-iteration path would have."""
+        if self.pm.pending:
+            self.sync()
+
+    def sync(self):
+        """Materialize all macro iterations that completed strictly before
+        the current event's timestamp, then bring the power manager up to
+        the last materialized instant (the per-iteration path would have
+        ticked it at each of those iteration-end events). ``_next_due`` is a
+        lower bound on the earliest unmaterialized end, making the common
+        nothing-elapsed case a single comparison."""
+        now = self.loop.now
+        if now <= self._next_due:
+            return
+        last = 0.0
+        nxt = math.inf
+        for gpu in self.gpus:
+            p = gpu.plan
+            if p is None:
+                continue
+            ends = p.end_times
+            m = p.m
+            if m < len(ends) and ends[m] < now:
+                m += int(ends[m:].searchsorted(now, side="left"))
+                end = ends[m - 1]
+                self._materialize(gpu, m)
+                if end > last:
+                    last = end
+            if m < len(ends) and ends[m] < nxt:
+                nxt = ends[m]
+        self._next_due = nxt
+        if last:
+            self.pm.tick(last)
+
+    def _truncate_plan(self, gpu: GPU, t: float):
+        """Cut a running plan at the end of the iteration in flight at time
+        ``t`` (an intrinsic boundary for the per-iteration path) and
+        re-schedule its completion event there."""
+        p = gpu.plan
+        m = p.m
+        j = m + int(p.end_times[m:].searchsorted(t, side="left"))
+        if j >= len(p.end_times) - 1:
+            return                 # already ends at the in-flight boundary
+        p.end_times = p.end_times[:j + 1]    # O(1) views
+        p.dts = p.dts[:j + 1]
+        gpu.gen += 1
+        p.gen = gpu.gen
+        self._push(float(p.end_times[j]), "macro_done", (gpu.gid, gpu.gen))
+
+    def _validate_plans(self):
+        """Post-event check: any cap command/application on a GPU since its
+        plan was laid invalidates the not-yet-started iterations — truncate
+        at the in-flight boundary so the next plan re-reads fresh caps."""
+        if self.pm.version_total == self._capv_seen:
+            return
+        self._capv_seen = self.pm.version_total
+        capv = self.pm.cap_version
+        for gpu in self.gpus:
+            p = gpu.plan
+            if p is not None and p.capv != capv[gpu.gid]:
+                p.capv = capv[gpu.gid]
+                self._truncate_plan(gpu, self.loop.now)
+
+    def _on_macro_done(self, gid: int, gen: int):
+        gpu = self.gpus[gid]
+        p = gpu.plan
+        if p is None or gen != p.gen:
+            return                 # superseded by a truncation/cancellation
+        if p.m < len(p.end_times):
+            self._materialize(gpu, len(p.end_times))
+        gpu.k_hint = min(max(4 * p.m, 64), MACRO_CHUNK)
+        gpu.plan = None
+        gpu.iterating = False
+        done_any = False
+        epoch = gpu.tok_epoch
+        for r in gpu.active:
+            tok = r.tokens_out + epoch - r.tok_mark   # inlined _fold
+            r.tokens_out = tok
+            r.tok_mark = epoch
+            if tok >= r.rec.output_tokens:
+                r.rec.finish = self.now
+                self.finished_count += 1
+                self.recent_req_tpot.append(self.now, r.rec.tpot)
+                done_any = True
+        if done_any:
+            self._remove_finished(gpu)
         if gpu.draining and not gpu.active:
             self._push(self.now + self._drain_s(), "drain_done", gid)
             return
@@ -285,8 +753,7 @@ class NodeSimulator:
     def _kick_mixed(self, gpu: GPU):
         if gpu.iterating:
             return
-        gpu.active.extend(gpu.pending_join)
-        gpu.pending_join.clear()
+        self._merge_pending(gpu)
         if not gpu.mixed_prefill and not gpu.active:
             return
         gpu.iterating = True
@@ -314,28 +781,30 @@ class NodeSimulator:
             done_toks += chunk
             if done_toks >= req.rec.input_tokens:
                 req.rec.prefill_done = self.now
-                self.recent_ttft.append((self.now, req.rec.ttft))
+                self.recent_ttft.append(self.now, req.rec.ttft)
                 gpu.pending_join.append(req)   # same GPU continues decoding
             else:
                 gpu.mixed_prefill.appendleft((req, done_toks))
         if gpu.active:
-            self.recent_tpot.append((self.now, dt))
-            done = []
+            self.recent_tpot.append(self.now, dt)
+            self.decode_iters += 1
+            done_any = False
             for r in gpu.active:
                 r.tokens_out += 1
                 if r.tokens_out >= r.rec.output_tokens:
                     r.rec.finish = self.now
                     self.finished_count += 1
-            gpu.active = [r for r in gpu.active if r.rec.finish is None]
+                    done_any = True
+            nb = len(gpu.active)
+            gpu.ctx_sum += nb
+            self._g_ctx_sum += nb
+            if done_any:
+                self._remove_finished(gpu)
         self._kick_mixed(gpu)
 
     # ---------------- controller ----------------
-    def _window_p90(self, dq: deque) -> float:
-        while dq and dq[0][0] < self.now - METRIC_WINDOW_S:
-            dq.popleft()
-        if not dq:
-            return 0.0
-        return float(np.percentile([v for _, v in dq], 90))
+    def _window_p90(self, win: MetricWindow) -> float:
+        return win.p90(self.now - METRIC_WINDOW_S)
 
     def _queue_ttft_estimate(self) -> float:
         """Pessimistic TTFT signal from queue head age (early warning)."""
@@ -408,6 +877,7 @@ class NodeSimulator:
             gid = min(cands, key=lambda i: len(self.gpus[i].active))
             gpu = self.gpus[gid]
             gpu.draining = True
+            self._role_version += 1
             # migrate its active requests to remaining decode GPUs
             others = [i for i in self.decode_gpus() if i != gid]
             if others and gpu.active:
@@ -415,7 +885,18 @@ class NodeSimulator:
                     tgt = min(others, key=lambda i: len(self.gpus[i].active))
                     r.decode_gpu = tgt
                     self.gpus[tgt].pending_join.append(r)
+                    # fold the epoch delta first: the request leaves this
+                    # GPU's epoch domain with its exact token count
+                    ctx = r.rec.input_tokens + self._fold(gpu, r)
+                    gpu.ctx_sum -= ctx
+                    self._g_ctx_sum -= ctx
+                    self._g_ctx_n -= 1
                 gpu.active = []
+                if gpu.plan is not None:
+                    # the in-flight iteration still completes (and records
+                    # its TPOT entry) but nothing afterwards: the batch is
+                    # gone — same as the per-iteration path's orphaned event
+                    self._truncate_plan(gpu, self.now)
                 for i in others:
                     self._kick_decode(self.gpus[i])
             self._push(self.now + self._drain_s(), "drain_done", gid)
@@ -427,6 +908,7 @@ class NodeSimulator:
             gid = min(cands, key=lambda i: self.gpus[i].busy)
             gpu = self.gpus[gid]
             gpu.draining = True
+            self._role_version += 1
             if not gpu.busy:
                 self._push(self.now + self._drain_s(), "drain_done", gid)
             # else drain scheduled on prefill completion
@@ -438,6 +920,7 @@ class NodeSimulator:
             return
         gpu.draining = False
         gpu.role = "prefill" if gpu.role == "decode" else "decode"
+        self._role_version += 1
         # Algorithm 1 line 14: uniform power after a GPU move
         t_ready, gpus, per = self.pm.distribute_uniform(self.now)
         self._push(t_ready, "uniform_ready", (gpus, per))
@@ -456,9 +939,10 @@ class NodeSimulator:
 
     # ---------------- cluster-facing signals ----------------
     def queued_prefill_tokens(self) -> int:
-        toks = sum(r.rec.input_tokens for r in self.q_prefill)
-        toks += sum(max(req.rec.input_tokens - done, 0)
-                    for g in self.gpus for req, done in g.mixed_prefill)
+        toks = self.q_prefill_tokens
+        if self.coalesced:
+            toks += sum(max(req.rec.input_tokens - done, 0)
+                        for g in self.gpus for req, done in g.mixed_prefill)
         return toks
 
     def prefill_capacity_tps(self) -> float:
@@ -468,14 +952,24 @@ class NodeSimulator:
         report their real (different) rates, and a mid-drain role flip is
         reflected the moment the GPU leaves the role list. The rate is
         amortized over a full prefill batch so per-batch overhead is
-        counted once, like the scheduler pays it."""
+        counted once, like the scheduler pays it.
+
+        The router consults every node on every arrival; the value only
+        changes with a cap change or a role/drain transition, so it is
+        cached on (cap version, role version)."""
+        key = (self.pm.version_total, self._role_version)
+        cached = self._cap_tps_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
         pre = self.prefill_gpus() or [g.gid for g in self.gpus
                                       if not g.draining]
-        return sum(
+        tps = sum(
             MAX_PREFILL_BATCH_TOKENS /
             self.cost.prefill_time(MAX_PREFILL_BATCH_TOKENS,
                                    self.pm.effective[g])
             for g in pre)
+        self._cap_tps_cache = (key, tps)
+        return tps
 
     def router_load(self, extra_tokens: int = 0) -> float:
         """Power-adjusted load signal for the cluster router: estimated time
@@ -526,6 +1020,7 @@ class NodeSimulator:
             self._kick_mixed(gpu)
         else:
             self.q_prefill.append(req)
+            self.q_prefill_tokens += req.rec.input_tokens
             for gid in self.prefill_gpus():
                 self._kick_prefill(self.gpus[gid])
 
@@ -536,8 +1031,22 @@ class NodeSimulator:
     def n_unfinished(self) -> int:
         return len(self.records) - self.finished_count
 
+    # Event kinds whose handlers read materialization-dependent state
+    # (global context sums, TPOT windows, token epochs for drain folds).
+    # The rest only touch queues, the ring, or the power manager — all
+    # maintained eagerly — so skipping the sync both saves the scan and
+    # coalesces materialization into fewer, larger runs. ``macro_done``
+    # force-materializes its own plan inside the handler.
+    _SYNC_KINDS = frozenset(("transfer_done", "ctrl", "drain_done"))
+
     def handle(self, kind: str, payload=None):
-        """Event sink: all node events dispatch through here."""
+        """Event sink: all node events dispatch through here. Macro fidelity
+        first materializes any iterations that completed before this event
+        (``sync``) when the handler can read iteration-dependent state, and
+        afterwards re-validates running plans against cap changes the
+        handler may have made."""
+        if self._macro and kind in self._SYNC_KINDS:
+            self.sync()
         self.pm.tick(self.now)
         if kind == "arrival":
             self.submit(payload)
@@ -547,6 +1056,8 @@ class NodeSimulator:
             self._on_transfer_done(payload)
         elif kind == "decode_iter":
             self._on_decode_iter(*payload)
+        elif kind == "macro_done":
+            self._on_macro_done(*payload)
         elif kind == "mixed_iter":
             self._on_mixed_iter(*payload)
         elif kind == "ctrl":
@@ -561,12 +1072,15 @@ class NodeSimulator:
             self._on_drain_done(payload)
         else:
             raise ValueError(f"unknown event kind {kind!r}")
+        if self._macro:
+            self._validate_plans()
 
     def summary(self) -> GoodputSummary:
         duration = max((r.finish or self.now) for r in self.records) if \
             self.records else self.now
         if self.power_samples:
-            avg_w = float(np.mean([w for _, w in self.power_samples]))
+            avg_w = float(np.mean(np.fromiter(
+                (w for _, w in self.power_samples), dtype=np.float64)))
         else:
             avg_w = sum(self.pm.effective)
         return summarize(self.records, duration, avg_w)
@@ -575,7 +1089,10 @@ class NodeSimulator:
         """Single-node entry point: drives a private event loop to completion
         (cluster runs are driven by ``core.cluster.ClusterSimulator``).
         All records are registered upfront so a horizon-truncated run still
-        counts never-arrived requests against SLO attainment."""
+        counts never-arrived requests against SLO attainment. (Note: under
+        macro fidelity a horizon-truncated run may stop the clock slightly
+        earlier than per-iteration fidelity — completed-request records are
+        identical, but ``duration_s`` of unfinished tails can differ.)"""
         for i, (t, it, ot, ts, ps) in enumerate(workload.entries):
             rec = RequestRecord(i, t, it, ot, ttft_slo=ts, tpot_slo=ps)
             self.records.append(rec)
