@@ -2,8 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
+import subprocess
 import time
 
 from repro.configs import get_config
@@ -28,16 +30,33 @@ def sim_run(policy, workload, *, budget=NODE_BUDGET_W, ctrl=None,
     return sim, summary
 
 
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Short SHA of the checkout the benchmark ran from (``unknown`` when
+    git is unavailable, e.g. a source tarball)."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
 def save_artifact(name: str, payload, timer: "Timer" = None):
-    """Write one benchmark's JSON artifact. When a ``Timer`` is passed, the
-    artifact gains ``wall_s`` and ``sim_events`` (simulator events
-    dispatched while it ran) so the perf trajectory of every figure is
-    recorded in the BENCH_*.json history, not just its derived metrics."""
+    """Write one benchmark's JSON artifact, stamped with the git SHA it was
+    produced from — perf/quality trajectories in the artifact history are
+    attributable to commits. When a ``Timer`` is passed, the artifact gains
+    ``wall_s`` and ``sim_events`` (simulator events dispatched while it
+    ran) so the perf trajectory of every figure is recorded in the
+    BENCH_*.json history, not just its derived metrics."""
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, f"{name}.json")
+    if not isinstance(payload, dict):
+        payload = {"rows": payload}
+    payload = {**payload, "git_sha": git_sha()}
     if timer is not None:
-        if not isinstance(payload, dict):
-            payload = {"rows": payload}
         payload = {**payload, "wall_s": round(timer.dt, 3),
                    "sim_events": timer.events}
     with open(path, "w") as f:

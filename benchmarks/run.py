@@ -15,7 +15,8 @@ import time
 import traceback
 
 SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
-          "fig10hetero", "simperf", "roofline", "kernels", "beyond")
+          "fig10hetero", "fig11fleet", "simperf", "roofline", "kernels",
+          "beyond")
 
 
 def main() -> None:
@@ -31,13 +32,14 @@ def main() -> None:
     from benchmarks import (beyond_ablations, fig4_power_curves,
                             fig5_static_slo, fig6_queueing, fig7_slo_scaling,
                             fig8_dynamic, fig9_cluster_scaling,
-                            fig10_hetero_dyngpu, kernels_bench, roofline,
-                            sim_throughput)
+                            fig10_hetero_dyngpu, fig11_elastic_fleet,
+                            kernels_bench, roofline, sim_throughput)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
         "fig8": fig8_dynamic, "fig9cluster": fig9_cluster_scaling,
-        "fig10hetero": fig10_hetero_dyngpu, "simperf": sim_throughput,
+        "fig10hetero": fig10_hetero_dyngpu,
+        "fig11fleet": fig11_elastic_fleet, "simperf": sim_throughput,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
     }

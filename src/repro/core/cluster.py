@@ -36,8 +36,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
-
 from repro.configs.base import ModelConfig
 from repro.core.controller import (ControllerConfig, NodeStress, StaticPolicy)
 from repro.core.costmodel import MI300X, GPUSpec
@@ -62,16 +60,31 @@ class ClusterConfig:
 
 
 class PowerAwareRouter:
-    """Dispatch to the node with the least marginal power-adjusted load:
-    (queued prefill tokens + this request's tokens) / effective prefill-role
+    """Dispatch policies over the live node set:
+
+    ``capacity`` (default) — least marginal power-adjusted load: (queued
+    prefill tokens + this request's tokens) / effective prefill-role
     capacity, plus the queue-head-age early warning. Capacity-relative
     dispatch is what makes heterogeneous nodes and in-flight role flips
     route correctly — a node that just gained a prefill GPU (or has faster
-    ones) absorbs proportionally more traffic. Ties (e.g. an idle
-    homogeneous cluster) round-robin via a rotating start index so request
-    0..k don't all pile onto node 0."""
+    ones) absorbs proportionally more traffic.
 
-    def __init__(self):
+    ``joules`` — least marginal joules per token (the per-request energy
+    accounting's price signal, ``NodeSimulator.marginal_joules_per_token``):
+    an energy-cost-aware fleet sends work where a token is cheapest — e.g.
+    a TPU-v5e pool at 200 W beats an MI300X pool at 750 W when both have
+    room. Equal prices (identical hardware at identical caps and batch)
+    fall back to the capacity-relative load, so the policy degrades to
+    ``capacity`` exactly when energy cannot distinguish the nodes.
+
+    Ties (e.g. an idle homogeneous cluster) round-robin via a rotating
+    start index so requests 0..k don't all pile onto node 0."""
+
+    POLICIES = ("capacity", "joules")
+
+    def __init__(self, policy: str = "capacity"):
+        assert policy in self.POLICIES, policy
+        self.policy = policy
         self._rr = 0
         self.trace: List[tuple] = []    # (t, node_id)
 
@@ -81,7 +94,13 @@ class PowerAwareRouter:
         self._rr += 1
         order = list(nodes[k:]) + list(nodes[:k])
         extra = req.rec.input_tokens if req is not None else 0
-        node = min(order, key=lambda nd: nd.router_load(extra))
+        if self.policy == "joules":
+            out = req.rec.output_tokens if req is not None else 256
+            node = min(order, key=lambda nd: (
+                nd.marginal_joules_per_token(extra, out),
+                nd.router_load(extra)))
+        else:
+            node = min(order, key=lambda nd: nd.router_load(extra))
         self.trace.append((now, node.node_id))
         return node
 
@@ -100,23 +119,31 @@ class ClusterSimulator:
                  node_budgets: Optional[Sequence[float]] = None,
                  gpu_specs: Optional[Sequence[GPUSpec]] = None,
                  powers: Optional[Sequence[PowerModel]] = None,
-                 fidelity: str = "macro"):
+                 fidelity: str = "macro", router_policy: str = "capacity"):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
-        resolves from the node's spec). ``fidelity``: forwarded to every
-        node — ``"macro"`` (default, event-coalesced decode) or ``"iter"``
-        (one event per decode iteration; the golden-equivalence path)."""
+        resolves from the node's spec). When ``node_budgets`` is omitted,
+        each node's default budget is clamped to its spec's cap envelope —
+        so e.g. a TPU-v5e node (8 x 110–200 W) drops into an MI300X/H100
+        cluster without hand-built per-node budgets. ``fidelity``:
+        forwarded to every node — ``"macro"`` (default, event-coalesced
+        decode) or ``"iter"`` (one event per decode iteration; the
+        golden-equivalence path). ``router_policy``: see PowerAwareRouter."""
         self.loop = EventLoop()
-        budgets = list(node_budgets) if node_budgets else \
-            [node_budget_w] * n_nodes
-        assert len(budgets) == n_nodes
-        self.facility_budget_w = facility_budget_w or float(sum(budgets))
-        assert sum(budgets) <= self.facility_budget_w + 1e-6
         pols = list(policies) if policies else [policy] * n_nodes
         specs = list(gpu_specs) if gpu_specs else [gpu] * n_nodes
         assert len(specs) == n_nodes
         pwrs = list(powers) if powers else [power] * n_nodes
         assert len(pwrs) == n_nodes
+        if node_budgets:
+            budgets = list(node_budgets)
+        else:
+            n_per = [p.n_prefill + p.n_decode for p in pols]
+            budgets = [min(node_budget_w, n_per[i] * specs[i].max_cap_w)
+                       for i in range(n_nodes)]
+        assert len(budgets) == n_nodes
+        self.facility_budget_w = facility_budget_w or float(sum(budgets))
+        assert sum(budgets) <= self.facility_budget_w + 1e-6
         self.nodes = [
             NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
                           gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
@@ -125,7 +152,7 @@ class ClusterSimulator:
             for i in range(n_nodes)
         ]
         self.fidelity = fidelity
-        self.router = PowerAwareRouter()
+        self.router = PowerAwareRouter(router_policy)
         self.ccfg = cluster_cfg or ClusterConfig()
         self.records: List[RequestRecord] = []
         self.shift_trace: List[tuple] = []    # (t, src, dst, watts)
@@ -136,12 +163,22 @@ class ClusterSimulator:
         self._last_shift_t = -1e9
         self._flip_node: Optional[int] = None   # node with a drain in flight
         self._last_flip_t = -1e9
+        # fleet membership (core.fleet flips these): inactive nodes take no
+        # routed traffic and no coordinator attention; a membership power
+        # redistribution in flight pauses coordinator budget ops
+        self.active: List[bool] = [True] * n_nodes
+        self.churn_inflight = False
         self.loop.subscribe("role_flip", self._on_role_flip)
+
+    def active_nodes(self) -> List[NodeSimulator]:
+        return [nd for nd, a in zip(self.nodes, self.active) if a]
 
     # ---------------- invariants ----------------
     def assert_facility_invariant(self):
         """Worst-case facility accounting: in-flight budget shrinks count at
-        the old (higher) budget, so this must hold at every instant."""
+        the old (higher) budget, so this must hold at every instant.
+        Powered-off nodes hold zero budget, so summing every node covers
+        fleet membership changes too."""
         total = sum(nd.pm.budget for nd in self.nodes)
         assert total <= self.facility_budget_w + 1e-6, \
             (total, self.facility_budget_w)
@@ -151,6 +188,29 @@ class ClusterSimulator:
         return total
 
     # ---------------- event handling ----------------
+    def sync_all(self):
+        """Bring every live node's macro-stepped iterations and power
+        manager up to date (cross-node readers must not see stale state).
+        Shared by cluster events and the fleet manager's churn/migration
+        events."""
+        if self.fidelity == "macro":
+            for nd in self.nodes:
+                if not nd.defunct:
+                    nd.sync()
+
+    def validate_all(self):
+        """Post-event plan revalidation on every live node (cap changes this
+        event made truncate running plans at the in-flight boundary)."""
+        if self.fidelity == "macro":
+            for nd in self.nodes:
+                if not nd.defunct:
+                    nd._validate_plans()
+
+    def route(self, req: SimRequest) -> NodeSimulator:
+        """Router dispatch over the active membership (fleet requeues and
+        migrations re-enter through here too)."""
+        return self.router.pick(self.loop.now, self.active_nodes(), req)
+
     def _handle(self, kind: str, payload=None):
         # cluster events read cross-node state (router loads, stress
         # summaries, facility accounting): bring every node's macro-stepped
@@ -163,38 +223,45 @@ class ClusterSimulator:
         if kind == "arrival":
             if self.fidelity == "macro":
                 for nd in self.nodes:
-                    nd.sync_power()
+                    if not nd.defunct:
+                        nd.sync_power()
             req, node_id = payload
+            if node_id is not None and not self.active[node_id]:
+                node_id = None    # pinned to a node that left: re-route
+            if node_id is None and not self.active_nodes():
+                # whole fleet momentarily dark (churn window): hold the
+                # arrival and retry, like the fleet's own requeue path
+                self.loop.push(now + 0.25, self._handle, "arrival",
+                               (req, None))
+                return
             node = (self.nodes[node_id] if node_id is not None
-                    else self.router.pick(now, self.nodes, req))
+                    else self.route(req))
             node.handle("arrival", req)
         elif kind == "cluster_ctrl":
-            if self.fidelity == "macro":
-                for nd in self.nodes:
-                    nd.sync()
+            self.sync_all()
             self._on_cluster_ctrl()
         elif kind == "budget_ready":
-            if self.fidelity == "macro":
-                for nd in self.nodes:
-                    nd.sync()
+            self.sync_all()
             self._on_budget_ready(*payload)
         else:
             raise ValueError(f"unknown cluster event {kind!r}")
-        if self.fidelity == "macro":
-            for nd in self.nodes:
-                nd._validate_plans()
+        self.validate_all()
 
     def _on_budget_ready(self, src_id: int, dst_id: int, freed: float):
         now = self.loop.now
         src, dst = self.nodes[src_id], self.nodes[dst_id]
-        src.pm.commit_budget(now)
-        absorbed = dst.pm.grow_budget(now, freed)
-        if absorbed < freed - 1e-9:
-            # sink at its ceiling: return the remainder to the source so
-            # facility watts are conserved
-            src.pm.grow_budget(now, freed - absorbed)
         self._inflight.discard(src_id)
         self._inflight.discard(dst_id)
+        if not src.pm.powered:
+            # source failed mid-shift: its watts left with it (the fleet
+            # redistributed them at the failure instant); nothing to hand on
+            return
+        src.pm.commit_budget(now)
+        absorbed = dst.pm.grow_budget(now, freed) if dst.pm.powered else 0.0
+        if absorbed < freed - 1e-9:
+            # sink at its ceiling (or gone): return the remainder to the
+            # source so facility watts are conserved
+            src.pm.grow_budget(now, freed - absorbed)
         self.shift_trace.append((now, src_id, dst_id, absorbed))
         self.assert_facility_invariant()
 
@@ -213,9 +280,10 @@ class ClusterSimulator:
 
     def _fair_ceiling_w(self, node_id: int) -> float:
         """Most watts this node could ever hold under the facility budget:
-        its own GPU-cap ceiling, or the facility minus every other node's
-        floor — whichever binds first."""
-        others_floor = sum(nd.pm.budget_floor_w for nd in self.nodes
+        its own GPU-cap ceiling, or the facility minus every other *active*
+        node's floor — whichever binds first. Powered-off nodes hold no
+        watts, so elasticity raises every survivor's fair ceiling."""
+        others_floor = sum(nd.pm.budget_floor_w for nd in self.active_nodes()
                            if nd.node_id != node_id)
         return min(self.nodes[node_id].pm.budget_ceil_w,
                    self.facility_budget_w - others_floor)
@@ -292,8 +360,10 @@ class ClusterSimulator:
         self.budget_trace.append(
             (now, [nd.pm.budget for nd in self.nodes], total))
         c = self.ccfg
-        if c.allow_shift or c.allow_gpu_move:
-            stresses = [nd.stress_summary() for nd in self.nodes]
+        live = self.active_nodes()
+        if (c.allow_shift or c.allow_gpu_move) and live \
+                and not self.churn_inflight:
+            stresses = [nd.stress_summary() for nd in live]
             dst = max(stresses, key=lambda s: s.stress)
             if dst.stress >= c.dst_stress_min:
                 shifted = False
@@ -353,8 +423,20 @@ class ClusterSimulator:
         per_node_w = []
         for nd in self.nodes:
             if nd.power_samples:
-                per_node_w.append(float(np.mean(np.fromiter(
-                    (w for _, w in nd.power_samples), dtype=np.float64))))
+                # stepwise time-weighted average over the run: a node that
+                # the fleet powered off mid-run (its sample trail ends in a
+                # 0 W mark) must not count as provisioned while dark —
+                # that unprovisioned headroom is the elastic fleet's
+                # qps-per-kW win. Before its first sample (standby joiner)
+                # a node contributes nothing.
+                total = 0.0
+                samples = nd.power_samples
+                for i, (t, w) in enumerate(samples):
+                    t_next = samples[i + 1][0] if i + 1 < len(samples) \
+                        else duration
+                    total += w * max(t_next - t, 0.0)
+                per_node_w.append(total / duration if duration > 0
+                                  else samples[-1][1])
             else:
                 per_node_w.append(sum(nd.pm.effective))
         return summarize(self.records, duration, float(sum(per_node_w)))

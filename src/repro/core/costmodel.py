@@ -39,6 +39,10 @@ class GPUSpec:
     hbm_bw: float                # bytes/s
     hbm_bytes: float
     link_bw: float               # intra-node per-pair (XGMI / ICI / NVLink)
+    # cross-node interconnect available to ONE migration stream (RDMA NIC
+    # share, e.g. one 400 GbE port): sets the cost of moving a live
+    # request's KV cache to another node (``core.fleet`` migration engine)
+    node_link_bw: float = 50e9
     # serving-efficiency calibration (vLLM-style single-GPU TP=1 serving,
     # includes scheduler/launch inefficiency; see EXPERIMENTS.md §Calibration)
     # Serving MFU is modeled flat in batch tokens: co-batching keeps small
@@ -64,8 +68,8 @@ H100 = GPUSpec("h100", peak_flops=989e12, hbm_bw=3.35e12,
                hbm_bytes=80e9, link_bw=450e9,
                min_cap_w=300.0, max_cap_w=700.0, power="h100")
 TPU_V5E = GPUSpec("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
-                  hbm_bytes=16e9, link_bw=50e9, mfu_prefill=0.15,
-                  mbu_decode=0.48,
+                  hbm_bytes=16e9, link_bw=50e9, node_link_bw=25e9,
+                  mfu_prefill=0.15, mbu_decode=0.48,
                   min_cap_w=110.0, max_cap_w=200.0, power="tpu_v5e")
 
 
@@ -156,6 +160,13 @@ class CostModel:
     def kv_transfer_time(self, n_tokens: int) -> float:
         """Bulk KV-cache pull, prefill GPU -> decode GPU (counted in TPOT)."""
         return self._kv_per_token * n_tokens / self.gpu.link_bw
+
+    def kv_migrate_time(self, ctx_tokens: int) -> float:
+        """Cross-node migration of a live request: its whole KV cache
+        (prompt + generated context) over the node interconnect. Orders of
+        magnitude slower than the intra-node ring pull — the migration
+        engine's drain→transfer→resume cost is dominated by this."""
+        return self._kv_per_token * ctx_tokens / self.gpu.node_link_bw
 
     def max_decode_batch(self, avg_ctx: int) -> int:
         """KV capacity / scheduler bound for a decode GPU."""

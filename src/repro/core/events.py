@@ -34,6 +34,7 @@ class EventLoop:
         self.now = 0.0
         self.dispatched = 0            # events dispatched by *this* loop
         self._subs: Dict[str, List[Callable]] = {}
+        self._cancelled: set = set()   # seq tokens of revoked events
 
     def subscribe(self, topic: str, fn: Callable[[object], None]) -> None:
         self._subs.setdefault(topic, []).append(fn)
@@ -43,16 +44,32 @@ class EventLoop:
             fn(payload)
 
     def push(self, t: float, handler: Callable[[str, object], None],
-             kind: str, payload=None) -> None:
-        heapq.heappush(self.heap, (t, next(self._seq), kind, handler, payload))
+             kind: str, payload=None) -> int:
+        """Schedule an event; returns a token accepted by ``cancel``."""
+        seq = next(self._seq)
+        heapq.heappush(self.heap, (t, seq, kind, handler, payload))
+        return seq
+
+    def cancel(self, token: int) -> None:
+        """Revoke a scheduled event by its ``push`` token. The heap entry
+        stays (heaps cannot delete cheaply) but ``step`` discards it without
+        dispatching — used for fallback timers that a faster completion path
+        supersedes (e.g. a fleet leave-drain deadline)."""
+        self._cancelled.add(token)
 
     def peek_time(self) -> Optional[float]:
         return self.heap[0][0] if self.heap else None
 
     def step(self) -> float:
-        """Pop the next event, advance the clock, dispatch. Returns its time."""
-        t, _, kind, handler, payload = heapq.heappop(self.heap)
+        """Pop the next event, advance the clock, dispatch. Returns its time.
+        Cancelled events advance the clock (their time has passed) but do
+        not dispatch."""
+        t, seq, kind, handler, payload = heapq.heappop(self.heap)
         self.now = t
+        if self._cancelled:
+            if seq in self._cancelled:
+                self._cancelled.discard(seq)
+                return t
         self.dispatched += 1
         EventLoop.dispatched_total += 1
         handler(kind, payload)

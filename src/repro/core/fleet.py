@@ -1,0 +1,426 @@
+"""Elastic fleet management: node churn, cross-node request migration, and
+facility-level power redistribution on top of ``ClusterSimulator``.
+
+The cluster layer (``core.cluster``) manages a FIXED node set: the
+coordinator moves watts and roles between nodes that are always there. Real
+fleets are elastic — nodes join (capacity brought online for a peak), leave
+(maintenance windows), and fail (abruptly, with state loss) — and RAPID's
+DISTRIBUTEUNIFORMPOWER step implicitly assumes the facility can re-level
+watts whenever membership changes. ``FleetManager`` closes that gap with
+three mechanisms, all scheduled as events on the cluster's shared loop:
+
+**Membership churn.** ``schedule_join/leave/fail`` place churn events on
+the event loop. A *join* runs facility-level DISTRIBUTEUNIFORMPOWER through
+the PowerManager's hierarchical budget ops with the same source-before-sink
+discipline the coordinator uses: survivors ``shrink_budget`` toward the new
+uniform share first, and only when those shrinks are in force does the
+commit release the watts that ``power_on`` the joiner. A *leave* drains the
+node — queued work re-routes for free, KV-holding work migrates — then
+powers it off and re-levels its watts across the survivors (raise-only:
+freed watts cannot violate the facility cap). A *fail* is abrupt: every
+request the node held (including those living only in event payloads —
+in-flight prefill batches and ring transfers) loses its KV and re-enters
+through the router from scratch. The facility invariant
+``sum(node budgets) <= facility budget`` is asserted across every one of
+these transitions, with in-flight shrinks counted at their old budgets.
+
+**KV-aware migration.** A live decode request carries KV cache that is
+expensive to move: ``kv_bytes_per_token * (prompt + generated)`` over the
+cross-node interconnect (``GPUSpec.node_link_bw``). Migration is
+drain→transfer→resume: the request leaves its batch at an iteration
+boundary (with exact token/energy folds, and the macro plan truncated at
+the in-flight iteration), the transfer occupies ``kv_migrate_time``, and on
+arrival the request joins the least-saturated decode pool
+(``adopt_decode``), retrying while pools are full. This is what lets the
+coordinator flip roles on nodes carrying *pinned-only* traffic: the last
+decode GPU on a node may flip to prefill because its batch can leave.
+
+**Per-request energy accounting** (``core.simulator``) rides along: every
+record accumulates busy-draw joules over its actual path — including work a
+failure threw away — so the fleet's ``energy_per_good_token_j`` exposes the
+true energy price of churn handling strategies.
+
+``FleetConfig(elastic=False)`` is the baseline arm for the fig11
+experiment: churn still happens (it is the environment, not a policy), but
+leaves are handled like failures (no migration — in-flight work re-enters
+from scratch) and the departed node's watts stay stranded instead of being
+redistributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cluster import ClusterSimulator
+from repro.core.simulator import NodeSimulator, SimRequest
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    elastic: bool = True            # False: no migration, no redistribution
+    redistribute: bool = True       # facility re-level on churn (elastic)
+    migrate_latency_s: float = 0.002   # per-migration fixed setup (RPC)
+    requeue_latency_s: float = 0.25    # client retry after a node failure
+    adopt_retry_s: float = 0.02     # decode pools saturated: retry placement
+    drain_grace_s: float = 10.0     # leave deadline; then remaining work
+    #                                 is failed out (maintenance is a hard
+    #                                 window, not a suggestion)
+
+
+class FleetManager:
+    """Elastic membership for a ``ClusterSimulator``.
+
+    Attaches as every node's ``migrator`` hook, so nodes hand over requests
+    they can no longer serve (leave drains, full-prefill role flips, ring
+    transfers landing on a decode-less node) without knowing where the work
+    goes. All fleet actions that change power caps run as fleet events on
+    the shared loop — wrapped in the same sync/validate discipline as
+    cluster events, so macro-stepped decode plans are cut at churn and
+    migration boundaries exactly where the per-iteration path would re-read
+    the world (``fidelity="iter"`` and ``"macro"`` stay bit-identical
+    through every join, leave, failure, and migration)."""
+
+    def __init__(self, cluster: ClusterSimulator,
+                 cfg: Optional[FleetConfig] = None,
+                 standby: Sequence[int] = ()):
+        for nd in cluster.nodes:
+            assert not nd.coalesced, "fleet churn needs disaggregated nodes"
+        self.cs = cluster
+        self.loop = cluster.loop
+        self.cfg = cfg or FleetConfig()
+        # nameplate budgets: what each node held at construction — the
+        # static arm re-powers a returning node at its nameplate (nobody
+        # re-leveled anything while it was away)
+        self._nameplate: Dict[int, float] = {
+            nd.node_id: nd.pm.budget for nd in cluster.nodes}
+        self._outbound: Dict[int, int] = {}   # node -> in-flight migrations
+        self._force_tokens: Dict[int, int] = {}   # leave deadline events
+        self.churn_trace: List[tuple] = []    # (t, kind, node_id)
+        self.migration_trace: List[tuple] = []  # (t, rid, src, reason, ctx)
+        self.requeue_trace: List[tuple] = []    # (t, rid, src)
+        for nd in cluster.nodes:
+            nd.migrator = self._migrate_out
+        for nid in standby:
+            cluster.active[nid] = False
+            cluster.nodes[nid].pm.power_off(0.0)
+            cluster.nodes[nid].power_samples.append((0.0, 0.0))
+
+    # ---------------- schedule API ----------------
+    def schedule_join(self, t: float, node_id: int) -> None:
+        self.loop.push(t, self._handle, "join", node_id)
+
+    def schedule_leave(self, t: float, node_id: int) -> None:
+        self.loop.push(t, self._handle, "leave", node_id)
+
+    def schedule_fail(self, t: float, node_id: int) -> None:
+        self.loop.push(t, self._handle, "fail", node_id)
+
+    # ---------------- event plumbing ----------------
+    def _handle(self, kind: str, payload=None):
+        # fleet events read and mutate cross-node state: same discipline as
+        # cluster events — materialize macro iterations first, truncate any
+        # plan whose caps this event changed afterwards
+        self.cs.sync_all()
+        if kind == "join":
+            self._on_join(payload)
+        elif kind == "join_commit":
+            self._on_join_commit(*payload)
+        elif kind == "leave":
+            self._on_leave(payload)
+        elif kind == "leave_check":
+            self._on_leave_check(payload)
+        elif kind == "leave_force":
+            self._on_leave_force(payload)
+        elif kind == "fail":
+            self._on_fail(payload)
+        elif kind == "migrate_arrive":
+            self._on_migrate_arrive(*payload)
+        elif kind == "adopt_retry":
+            self._try_adopt(payload)
+        elif kind == "requeue":
+            self._on_requeue(payload)
+        elif kind == "regrow":
+            self._grow_survivors(payload)
+        else:
+            raise ValueError(f"unknown fleet event {kind!r}")
+        self.cs.validate_all()
+
+    # ---------------- migration engine ----------------
+    def _migrate_out(self, reqs: List[SimRequest], node: NodeSimulator,
+                     has_kv: bool, reason: str):
+        """Node-side hook (``NodeSimulator.migrator``): take over requests
+        the node cannot serve. Runs inside node event handlers, so it only
+        *schedules* — target selection, adoption, and any cap changes happen
+        in fleet events with full sync/validate wrapping."""
+        now = self.loop.now
+        for req in reqs:
+            node.release_record(req)
+            if not has_kv:
+                # never prefilled: re-routing costs nothing but the queue
+                self.requeue_trace.append((now, req.rid, node.node_id))
+                self.loop.push(now, self._handle, "requeue", req)
+                continue
+            ctx = req.rec.input_tokens + req.tokens_out
+            dt = node.cost.kv_migrate_time(ctx) + self.cfg.migrate_latency_s
+            self._outbound[node.node_id] = \
+                self._outbound.get(node.node_id, 0) + 1
+            self.migration_trace.append(
+                (now, req.rid, node.node_id, reason, ctx))
+            self.loop.push(now + dt, self._handle, "migrate_arrive",
+                           (req, node.node_id))
+        if node.leaving:
+            self.loop.push(now, self._handle, "leave_check", node.node_id)
+
+    def _on_migrate_arrive(self, req: SimRequest, src_id: int):
+        self._outbound[src_id] -= 1
+        self._try_adopt(req)
+        src = self.cs.nodes[src_id]
+        if src.leaving:
+            self._on_leave_check(src_id)
+
+    def _try_adopt(self, req: SimRequest):
+        """Resume a migrated request on a node with decode slack, most
+        slack first — the node-level estimate can disagree with
+        ``adopt_decode``'s per-GPU batch check, so fall through the
+        candidates before conceding. Only when every pool is saturated,
+        retry later: backpressure, like the ring."""
+        cands = []
+        for nd in self.cs.active_nodes():
+            if nd.leaving or nd.defunct:
+                continue
+            dgpus = nd.decode_gpus()
+            if not dgpus:
+                continue
+            cap = nd.cost.max_decode_batch(int(nd._global_avg_ctx()))
+            used = sum(len(nd.gpus[g].active) + len(nd.gpus[g].pending_join)
+                       for g in dgpus)
+            slack = cap * len(dgpus) - used
+            if slack > 0:
+                cands.append((slack, nd))
+        cands.sort(key=lambda c: (-c[0], c[1].node_id))
+        for _, nd in cands:
+            if nd.adopt_decode(req):
+                return
+        self.loop.push(self.loop.now + self.cfg.adopt_retry_s,
+                       self._handle, "adopt_retry", req)
+
+    def _on_requeue(self, req: SimRequest):
+        live = [nd for nd in self.cs.active_nodes()
+                if not nd.leaving and not nd.defunct]
+        if not live:
+            self.loop.push(self.loop.now + self.cfg.requeue_latency_s,
+                           self._handle, "requeue", req)
+            return
+        self.cs.router.pick(self.loop.now, live, req).submit(req)
+
+    # ---------------- leave (graceful drain) ----------------
+    def _on_leave(self, nid: int):
+        if not self.cs.active[nid]:
+            return
+        now = self.loop.now
+        node = self.cs.nodes[nid]
+        self.cs.active[nid] = False          # router stops immediately
+        if self.cs._flip_node == nid:        # coordinator drain dies with it
+            self.cs._flip_node = None
+        self.churn_trace.append((now, "leave", nid))
+        if not self.cfg.elastic:
+            # static fleet has no migration path: the maintenance pull
+            # loses in-flight work (requeued from scratch) and nobody
+            # re-levels the watts it strands
+            self._fail_node(nid, redistribute=False)
+            return
+        node.leaving = True
+        no_kv, with_kv = node.evict_for_leave()
+        self._migrate_out(no_kv, node, False, "leave")
+        self._migrate_out(with_kv, node, True, "leave")
+        self._force_tokens[nid] = self.loop.push(
+            now + self.cfg.drain_grace_s, self._handle, "leave_force", nid)
+        self._on_leave_check(nid)
+
+    def _on_leave_check(self, nid: int):
+        node = self.cs.nodes[nid]
+        if not node.leaving:
+            return
+        if node.is_empty() and self._outbound.get(nid, 0) == 0:
+            self._finish_leave(node)
+
+    def _on_leave_force(self, nid: int):
+        """Drain deadline hit: maintenance windows don't wait. Whatever is
+        still on the node is failed out (requeue from scratch)."""
+        node = self.cs.nodes[nid]
+        if not node.leaving:
+            return
+        self.churn_trace.append((self.loop.now, "leave_forced", nid))
+        node.leaving = False
+        self._fail_node(nid, redistribute=self.cfg.redistribute)
+
+    def _finish_leave(self, node: NodeSimulator):
+        now = self.loop.now
+        nid = node.node_id
+        node.leaving = False
+        node.defunct = True              # straggler events die quietly
+        token = self._force_tokens.pop(nid, None)
+        if token is not None:
+            self.loop.cancel(token)
+        released = node.pm.power_off(now)
+        node.power_samples.append((now, 0.0))
+        self.churn_trace.append((now, "leave_done", nid))
+        if self.cfg.redistribute and released > 0:
+            self._grow_survivors(released)
+        self.cs.assert_facility_invariant()
+
+    # ---------------- failure (abrupt) ----------------
+    def _on_fail(self, nid: int):
+        if not self.cs.active[nid]:
+            return
+        self.cs.active[nid] = False
+        self.churn_trace.append((self.loop.now, "fail", nid))
+        if self.cs._flip_node == nid:
+            self.cs._flip_node = None
+        self.cs.nodes[nid].leaving = False
+        token = self._force_tokens.pop(nid, None)
+        if token is not None:
+            self.loop.cancel(token)
+        self._fail_node(
+            nid, redistribute=self.cfg.elastic and self.cfg.redistribute)
+
+    def _fail_node(self, nid: int, redistribute: bool):
+        now = self.loop.now
+        node = self.cs.nodes[nid]
+        reqs = node.evict_for_failure()      # marks the node defunct
+        released = node.pm.power_off(now)
+        node.power_samples.append((now, 0.0))
+        for req in reqs:
+            node.release_record(req)
+            # KV and generated tokens are gone; the spent joules are not
+            req.tokens_out = 0
+            req.tok_mark = 0
+            req.e_mark = 0.0
+            req.decode_gpu = None
+            req.rec.prefill_done = None
+            self.requeue_trace.append((now, req.rid, nid))
+            self.loop.push(now + self.cfg.requeue_latency_s,
+                           self._handle, "requeue", req)
+        if redistribute and released > 0:
+            self._grow_survivors(released)
+        self.cs.assert_facility_invariant()
+
+    # ---------------- join ----------------
+    def _on_join(self, nid: int):
+        if self.cs.active[nid]:
+            return
+        now = self.loop.now
+        node = self.cs.nodes[nid]
+        self.churn_trace.append((now, "join", nid))
+        if not (self.cfg.elastic and self.cfg.redistribute):
+            # static arm: the node reclaims its stranded nameplate watts —
+            # nothing was re-leveled while it was away
+            headroom = self.cs.facility_budget_w - \
+                sum(nd.pm.budget for nd in self.cs.nodes)
+            grant = min(headroom, self._nameplate[nid])
+            self._activate(node, grant)
+            return
+        # elastic join: facility-level DISTRIBUTEUNIFORMPOWER, source-
+        # before-sink one level up — survivors shrink toward the uniform
+        # share of the new membership first; the joiner powers on only when
+        # those shrinks are in force and their watts committed
+        live = [nd for nd in self.cs.active_nodes() if nd.pm.powered]
+        uniform = self.cs.facility_budget_w / (len(live) + 1)
+        t_ready, shrunk = now, []
+        for nd in live:
+            target = max(min(uniform, nd.pm.budget_ceil_w),
+                         nd.pm.budget_floor_w)
+            if (nd.pm.budget > target + 1.0
+                    and not nd.pm.budget_op_inflight
+                    and nd.node_id not in self.cs._inflight):
+                tr, freed = nd.pm.shrink_budget(now, nd.pm.budget - target)
+                if freed > 0:
+                    shrunk.append(nd.node_id)
+                    t_ready = max(t_ready, tr)
+        self.cs.churn_inflight = True        # coordinator pauses budget ops
+        self.loop.push(t_ready, self._handle, "join_commit", (nid, shrunk))
+
+    def _on_join_commit(self, nid: int, shrunk: List[int]):
+        now = self.loop.now
+        for sid in shrunk:
+            if self.cs.nodes[sid].pm.powered:
+                self.cs.nodes[sid].pm.commit_budget(now)
+        self.cs.churn_inflight = False
+        node = self.cs.nodes[nid]
+        # whatever the facility holds free NOW is what the joiner may take —
+        # recomputed from live budgets so concurrent churn cannot overdraw
+        avail = self.cs.facility_budget_w - \
+            sum(nd.pm.budget for nd in self.cs.nodes)
+        grant = min(avail, node.pm.budget_ceil_w)
+        if grant < node.pm.budget_floor_w - 1e-9:
+            # facility too tight right now (e.g. a concurrent failure ate
+            # the headroom): retry the join shortly
+            self.churn_trace.append((now, "join_deferred", nid))
+            self.loop.push(now + 1.0, self._handle, "join", nid)
+            return
+        self._activate(node, grant)
+        leftover = avail - grant
+        if leftover > 1e-9:
+            self._grow_survivors(leftover)
+
+    def _activate(self, node: NodeSimulator, grant: float):
+        now = self.loop.now
+        nid = node.node_id
+        node.defunct = False
+        node.leaving = False
+        for gpu in node.gpus:
+            # pre-departure execution state is moot: drains are cancelled
+            # and a plan truncated at leave time lost its completion event
+            # with the defunct node, so the iterating latch must not stick
+            gpu.draining = False
+            gpu.busy = False
+            gpu.iterating = False
+            gpu.plan = None
+            gpu.gen += 1
+            gpu.inflight_prefill = None
+        node._next_due = float("inf")
+        node._ext_flip_gids.clear()
+        node._role_version += 1
+        absorbed = node.pm.power_on(now, grant)
+        self.cs.active[nid] = True
+        node.start()                     # ctrl/sampling tick resumes
+        self.churn_trace.append((now, "join_done", nid))
+        self.cs.assert_facility_invariant()
+        return absorbed
+
+    # ---------------- facility re-leveling (raise-only side) -------------
+    def _grow_survivors(self, watts: float) -> float:
+        """Distribute freed watts across the active membership toward the
+        facility-uniform share: least-headroom first, so a node clamping at
+        its GPU-cap ceiling rolls its share onward. Raise-only — freed
+        watts cannot violate the facility cap — so it applies immediately,
+        exactly like ``PowerManager.grow_budget`` one level down. Watts no
+        eligible node can absorb right now (mid-budget-op, at ceiling, or
+        the membership momentarily empty) are re-offered shortly instead of
+        stranding — a later join/commit can still take them."""
+        now = self.loop.now
+        live = [nd for nd in self.cs.active_nodes()
+                if nd.pm.powered and not nd.pm.budget_op_inflight]
+        # a deferred re-offer may race a join that already granted (part
+        # of) these watts: the live budgets are authoritative, so clamp the
+        # claim to what the facility actually still holds free
+        headroom = self.cs.facility_budget_w - \
+            sum(nd.pm.budget for nd in self.cs.nodes)
+        left = watts = min(watts, max(headroom, 0.0))
+        if watts <= 1e-6:
+            return 0.0
+        if live:
+            order = sorted(live,
+                           key=lambda nd: nd.pm.budget_ceil_w - nd.pm.budget)
+            for i, nd in enumerate(order):
+                share = left / (len(order) - i)
+                give = min(share, nd.pm.budget_ceil_w - nd.pm.budget)
+                if give > 1e-9:
+                    left -= nd.pm.grow_budget(now, give)
+        blocked = any(nd.pm.powered and nd.pm.budget_op_inflight
+                      for nd in self.cs.active_nodes())
+        if left > 1e-6 and (blocked or not live):
+            # only retry while something can still change hands — a fleet
+            # pinned at its GPU-cap ceilings has genuinely no use for them
+            self.loop.push(now + 1.0, self._handle, "regrow", left)
+        return watts - left

@@ -3,6 +3,16 @@
 A request meets SLO iff TTFT <= ttft_slo AND mean TPOT <= tpot_slo.
 Goodput = rate of SLO-meeting requests. QPS/W uses average *provisioned*
 GPU power (the paper's accounting, Section 4).
+
+Per-request energy (``energy_j``): joules of *busy draw* integrated along
+the request's prefill/decode path by the simulator — prefill batches split
+proportionally by prompt tokens, decode iterations split evenly across the
+batch. It counts work actually burned for the request (including work later
+wasted by a node failure) but NOT idle/provisioned power — that overhead
+lives in ``avg_provisioned_w``/``qps_per_kw``. ``energy_per_good_token_j``
+divides fleet-wide spent energy by the output tokens of SLO-meeting
+requests, so wasted work (failed/migrated/SLO-missing requests) makes the
+goodput-relative energy price visibly worse.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ class RequestRecord:
     finish: Optional[float] = None
     ttft_slo: float = 1.0
     tpot_slo: float = 0.040
+    energy_j: float = 0.0          # busy-draw joules spent on this request
 
     @property
     def ttft(self) -> Optional[float]:
@@ -57,12 +68,16 @@ class GoodputSummary:
     duration_s: float
     avg_provisioned_w: float
     qps_per_kw: float
+    total_energy_j: float = 0.0
+    # spent joules per SLO-meeting output token; 0.0 when nothing met SLO
+    energy_per_good_token_j: float = 0.0
 
     def row(self) -> str:
         return (f"good {self.slo_attainment*100:5.1f}%  goodput "
                 f"{self.goodput_rps:6.2f} req/s  TTFT p90 {self.p90_ttft:6.3f}s "
                 f"TPOT p90 {self.p90_tpot*1e3:6.1f}ms  "
-                f"QPS/kW {self.qps_per_kw:5.2f}")
+                f"QPS/kW {self.qps_per_kw:5.2f}  "
+                f"J/tok {self.energy_per_good_token_j:5.2f}")
 
 
 def summarize(records: List[RequestRecord], duration_s: float,
@@ -78,6 +93,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
     out_tok = np.empty(n)
     ttft_slo = np.empty(n)
     tpot_slo = np.empty(n)
+    energy = np.empty(n)
     for i, r in enumerate(records):
         arrival[i] = r.arrival
         pd_[i] = np.nan if r.prefill_done is None else r.prefill_done
@@ -85,6 +101,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
         out_tok[i] = r.output_tokens
         ttft_slo[i] = r.ttft_slo
         tpot_slo[i] = r.tpot_slo
+        energy[i] = r.energy_j
     fin_mask = ~np.isnan(fin_t)
     n_fin = int(fin_mask.sum())
     ttft = pd_[fin_mask] - arrival[fin_mask]
@@ -96,6 +113,8 @@ def summarize(records: List[RequestRecord], duration_s: float,
     ttfts = ttft if n_fin else np.array([np.inf])
     tpots = tpot if n_fin else np.array([np.inf])
     goodput = n_good / duration_s if duration_s > 0 else 0.0
+    total_energy = float(energy.sum())
+    good_tokens = float(out_tok[fin_mask][good_mask].sum())
     return GoodputSummary(
         n_total=n, n_finished=n_fin, n_good=n_good,
         slo_attainment=n_good / max(n, 1),
@@ -107,4 +126,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
         duration_s=duration_s,
         avg_provisioned_w=avg_provisioned_w,
         qps_per_kw=1000.0 * goodput / max(avg_provisioned_w, 1.0),
+        total_energy_j=total_energy,
+        energy_per_good_token_j=(total_energy / good_tokens
+                                 if good_tokens > 0 else 0.0),
     )

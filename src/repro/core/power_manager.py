@@ -272,6 +272,52 @@ class PowerManager:
                 left -= give
         return absorbed
 
+    # -- fleet membership (node power on/off) ----------------------------------
+    @property
+    def powered(self) -> bool:
+        return self.budget > 0.0
+
+    def power_off(self, now: float) -> float:
+        """Take the whole node off the facility budget (leave/failure). A
+        powered-off node draws nothing and holds no watts, so its budget and
+        all caps drop to zero immediately — there is no enforcement latency
+        to wait out because the node is not *lowering under load*, it is
+        gone. Returns the watts released to the facility."""
+        released = self.budget
+        self.budget = 0.0
+        self._budget_target = 0.0
+        self.pending.clear()
+        for g in range(self.n):
+            self.commanded[g] = 0.0
+            self.effective[g] = 0.0
+            self.cap_version[g] += 1
+        self.version_total += self.n
+        self.budget_history.append((now, 0.0))
+        return released
+
+    def power_on(self, now: float, budget_w: float) -> float:
+        """Bring the node onto the facility budget with ``budget_w`` watts
+        (clamped to [floor, ceiling]) and uniform per-GPU caps. Caps take
+        effect immediately: a node powering on cannot be drawing above its
+        fresh caps. Returns the watts actually absorbed — the caller keeps
+        any remainder for other nodes (facility conservation)."""
+        assert not self.powered, "power_on on a live node"
+        budget = min(max(budget_w, self.budget_floor_w), self.budget_ceil_w)
+        if budget > budget_w + 1e-9:
+            raise ValueError(
+                f"power_on granted {budget_w} W < floor {self.budget_floor_w} W")
+        self.budget = budget
+        self._budget_target = budget
+        per = min(budget / self.n, self.max_cap)
+        for g in range(self.n):
+            self.commanded[g] = per
+            self.effective[g] = per
+            self.cap_version[g] += 1
+        self.version_total += self.n
+        self.budget_history.append((now, budget))
+        self.history.append((now, -1, per))     # -1: whole-node uniform set
+        return budget
+
     def at_limits(self, src: List[int], dst: List[int],
                   dst_max: Optional[float] = None) -> bool:
         """POWERLIMITSREACHED: no more watts can move src -> dst."""

@@ -61,6 +61,13 @@ class PowerModel:
     def draw(self, role: str, cap: float, busy: bool) -> float:
         return min(cap, self.demand(role, busy))
 
+    def joules(self, role: str, cap: float, dt_s: float,
+               busy: bool = True) -> float:
+        """Energy drawn over ``dt_s`` seconds at the given cap and state —
+        the per-request energy accounting integrates this along each
+        request's prefill/decode path (``core.simulator``)."""
+        return self.draw(role, cap, busy) * dt_s
+
 
 def mi300x() -> PowerModel:
     """Calibration: prefill s(750)=1.80 with tau=200 (still rising at 700);

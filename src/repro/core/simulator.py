@@ -194,8 +194,8 @@ class MetricWindow:
         return a + d * g
 
 
-@dataclasses.dataclass
-class SimRequest:
+@dataclasses.dataclass(eq=False)     # identity semantics: hashable, tracked
+class SimRequest:                    # by object in the in-flight tables
     rec: RequestRecord
     tokens_out: int = 0
     decode_gpu: Optional[int] = None
@@ -205,6 +205,12 @@ class SimRequest:
     # tok_mark). Folded back into ``tokens_out`` at every plan boundary
     # (join/finish/migration), so outside a running plan it is exact.
     tok_mark: int = 0
+    # energy accounting: ``rec.energy_j`` is exact up to the GPU's
+    # ``energy_epoch`` at ``e_mark``; the outstanding segment
+    # (energy_epoch - e_mark) folds in ONLY when the request finishes or
+    # leaves the GPU — the same instants under both fidelities, so the
+    # accumulated float sums match to the last bit.
+    e_mark: float = 0.0
 
     @property
     def rid(self):
@@ -221,12 +227,13 @@ class MacroPlan:
     runs into the TPOT window as slice copies and truncation is a view.
     Plain __slots__ class: one is built per planned run, on the hot path."""
 
-    __slots__ = ("gen", "end_times", "dts", "capv", "m")
+    __slots__ = ("gen", "end_times", "dts", "e_ends", "capv", "m")
 
-    def __init__(self, gen, end_times, dts, capv):
+    def __init__(self, gen, end_times, dts, e_ends, capv):
         self.gen = gen             # matches GPU.gen; stale events ignored
         self.end_times = end_times
         self.dts = dts
+        self.e_ends = e_ends       # cumulative per-request joules epochs
         self.capv = capv           # PowerManager.cap_version[gid] snapshot
         self.m = 0
 
@@ -251,6 +258,15 @@ class GPU:
     plan: Optional[MacroPlan] = None
     gen: int = 0
     tok_epoch: int = 0
+    # cumulative joules a request sitting in this GPU's batch has been
+    # charged since GPU creation (each decode iteration adds draw*dt/batch);
+    # requests carry an ``e_mark`` into it. Advanced sequentially under
+    # ``fidelity="iter"`` and via the cumsum-as-left-fold under ``"macro"``,
+    # so the epoch values agree bit-for-bit at every fold instant.
+    energy_epoch: float = 0.0
+    # in-flight prefill batch (fleet failure eviction needs to recover
+    # requests whose only reference otherwise lives in an event payload)
+    inflight_prefill: Optional[List[SimRequest]] = None
     # adaptive plan-length hint: ~4x the last realized run length (floor 64,
     # where the vectorized path takes over), so plan computation is not
     # wasted when joins keep cutting plans short, but grows geometrically
@@ -340,13 +356,15 @@ class NodeSimulator:
         # heterogeneous cluster gets per-node envelopes without extra plumbing
         self.cost = CostModel(cfg, gpu, power or get_power_model(gpu.power))
         self.n_gpus = policy.n_prefill + policy.n_decode
-        caps = policy.caps()
+        lo = min_cap_w if min_cap_w is not None else gpu.min_cap_w
+        hi = max_cap_w if max_cap_w is not None else gpu.max_cap_w
+        # clamp the policy's caps to THIS node's spec envelope before the
+        # budget check: one cluster-wide StaticPolicy then lands correctly
+        # on every spec (a 500 W split becomes 200 W caps on a TPU-v5e node)
+        caps = [min(max(c, lo), hi) for c in policy.caps()]
         assert sum(caps) <= node_budget_w + 1e-6, (caps, node_budget_w)
         self.pm = PowerManager(self.n_gpus, node_budget_w, initial_caps=caps,
-                               min_cap=min_cap_w if min_cap_w is not None
-                               else gpu.min_cap_w,
-                               max_cap=max_cap_w if max_cap_w is not None
-                               else gpu.max_cap_w)
+                               min_cap=lo, max_cap=hi)
         self.coalesced = coalesced
         if coalesced:
             self.gpus = [GPU(i, "mixed") for i in range(self.n_gpus)]
@@ -385,6 +403,20 @@ class NodeSimulator:
         # role/drain transition counter + capacity cache for the router
         self._role_version = 0
         self._cap_tps_cache = None
+        # fleet hooks (core.fleet): ``migrator(reqs, node, has_kv, reason)``
+        # receives requests this node can no longer serve; ``leaving`` makes
+        # completed prefills / KV transfers hand off instead of staying;
+        # ``defunct`` (failed/left) drops every subsequent event.
+        self.migrator = None
+        self.leaving = False
+        self.defunct = False
+        # in-flight ring KV transfers (insertion-ordered for determinism);
+        # requests here hold a ring slot and exist only in event payloads
+        self._transfers: Dict[SimRequest, None] = {}
+        # records handed to another node (migration/requeue) stay in the
+        # list — eviction storms must not pay O(records) per request — and
+        # are filtered out lazily at summary time
+        self._released_rids: set = set()
 
     # ---------------- event plumbing ----------------
     @property
@@ -405,7 +437,7 @@ class NodeSimulator:
 
     # ---------------- prefill ----------------
     def _kick_prefill(self, gpu: GPU):
-        if gpu.busy or gpu.draining or not self.q_prefill:
+        if gpu.busy or gpu.draining or self.leaving or not self.q_prefill:
             return
         batch, tokens = [], 0
         while (self.q_prefill and len(batch) < MAX_PREFILL_BATCH_REQS and
@@ -420,13 +452,28 @@ class NodeSimulator:
         if not batch:
             return
         gpu.busy = True
+        gpu.inflight_prefill = batch
         cap = self.pm.effective[gpu.gid]
         dt = self.cost.prefill_time(tokens, cap)
+        # batch energy attributed proportionally by prompt tokens (charged
+        # up front: if the node fails mid-batch the joules were still spent)
+        e_batch = self.cost.power.joules("prefill", cap, dt)
+        for req in batch:
+            req.rec.energy_j += e_batch * (req.rec.input_tokens / tokens)
         self._push(self.now + dt, "prefill_done", (gpu.gid, batch))
 
     def _on_prefill_done(self, gid: int, batch: List[SimRequest]):
         gpu = self.gpus[gid]
         gpu.busy = False
+        gpu.inflight_prefill = None
+        if self.leaving and self.migrator is not None:
+            # node is draining out of the fleet: the fresh KV leaves over
+            # the node interconnect instead of entering the local ring
+            for req in batch:
+                req.rec.prefill_done = self.now
+                self.recent_ttft.append(self.now, req.rec.ttft)
+            self.migrator(batch, self, True, "leave")
+            return
         for req in batch:
             req.rec.prefill_done = self.now
             self.recent_ttft.append(self.now, req.rec.ttft)
@@ -445,10 +492,22 @@ class NodeSimulator:
         while self.ring_free > 0 and self.ring_wait:
             req = self.ring_wait.popleft()
             self.ring_free -= 1
+            self._transfers[req] = None
             dt = self.cost.kv_transfer_time(req.rec.input_tokens)
             self._push(self.now + dt, "transfer_done", req)
 
     def _on_transfer_done(self, req: SimRequest):
+        if self.migrator is not None and (self.leaving
+                                          or not self.decode_gpus()):
+            # node is leaving, or carries no live decode role at all (it
+            # went full-prefill under a fleet role flip): the KV leaves
+            # cross-node instead of joining a local batch
+            self._transfers.pop(req, None)
+            self.ring_free += 1
+            self._ring_pump()
+            self.migrator([req], self, True,
+                          "leave" if self.leaving else "no_decode_role")
+            return
         dgpus = self.decode_gpus() or [g.gid for g in self.gpus
                                        if g.role == "decode"]
         load = lambda i: len(self.gpus[i].active) + len(self.gpus[i].pending_join)
@@ -458,6 +517,7 @@ class NodeSimulator:
             # (backpressure on prefill, paper Section 3.3)
             self._push(self.now + 0.02, "transfer_done", req)
             return
+        self._transfers.pop(req, None)
         self.ring_free += 1
         self._ring_pump()
         gid = min(dgpus, key=load)
@@ -481,8 +541,10 @@ class NodeSimulator:
         if not gpu.pending_join:
             return
         epoch = gpu.tok_epoch
+        e_epoch = gpu.energy_epoch
         for r in gpu.pending_join:
             r.tok_mark = epoch     # tokens_out is exact for an off-GPU req
+            r.e_mark = e_epoch
             ctx = r.rec.input_tokens + r.tokens_out
             gpu.ctx_sum += ctx
             self._g_ctx_sum += ctx
@@ -492,9 +554,12 @@ class NodeSimulator:
 
     @staticmethod
     def _fold(gpu: GPU, r: SimRequest) -> int:
-        """Fold the GPU's epoch delta into the request's exact token count."""
+        """Fold the GPU's epoch deltas into the request's exact token count
+        and spent energy (the request is finishing or leaving this GPU)."""
         r.tokens_out += gpu.tok_epoch - r.tok_mark
         r.tok_mark = gpu.tok_epoch
+        r.rec.energy_j += gpu.energy_epoch - r.e_mark
+        r.e_mark = gpu.energy_epoch
         return r.tokens_out
 
     def _remove_finished(self, gpu: GPU):
@@ -525,13 +590,16 @@ class NodeSimulator:
         if self._macro:
             self._start_macro(gpu, cap)
         else:
-            dt = self.cost.decode_step_time(len(gpu.active),
-                                            self._avg_ctx(gpu), cap)
-            self._push(self.now + dt, "decode_iter", (gpu.gid, dt))
+            b = len(gpu.active)
+            dt = self.cost.decode_step_time(b, self._avg_ctx(gpu), cap)
+            de = self.cost.power.draw("decode", cap, True) * dt / b
+            self._push(self.now + dt, "decode_iter", (gpu.gid, dt, de))
 
-    def _on_decode_iter(self, gid: int, dt: float):
+    def _on_decode_iter(self, gid: int, dt: float, de: float):
         gpu = self.gpus[gid]
         gpu.iterating = False
+        gpu.energy_epoch = gpu.energy_epoch + de
+        e_epoch = gpu.energy_epoch
         self.recent_tpot.append(self.now, dt)
         self.decode_iters += 1
         done_any = False
@@ -539,6 +607,8 @@ class NodeSimulator:
             r.tokens_out += 1
             if r.tokens_out >= r.rec.output_tokens:
                 r.rec.finish = self.now
+                r.rec.energy_j += e_epoch - r.e_mark
+                r.e_mark = e_epoch
                 self.finished_count += 1
                 self.recent_req_tpot.append(self.now, r.rec.tpot)
                 done_any = True
@@ -583,12 +653,15 @@ class NodeSimulator:
         floor = 2.0 * cost._active_params * max(b, 1) / cost._prefill_flops_s
         rel = cost.rel("decode", cap)
         oh = cost.gpu.overhead_decode_s
+        draw = cost.power.draw("decode", cap, True)
         if k <= 24:
             # scalar path: numpy's fixed per-op overhead loses at short k
             # (IEEE float64 ops are identical either way)
             dts = []
             ends = []
+            e_ends = []
             t = t0
+            e = gpu.energy_epoch
             ctx = gpu.ctx_sum
             for _ in range(k):
                 base = (weight + kv_per * (ctx / b) * b) / bw
@@ -598,11 +671,14 @@ class NodeSimulator:
                 dts.append(dt)
                 t = t + dt
                 ends.append(t)
+                e = e + draw * dt / b
+                e_ends.append(e)
                 ctx += b
                 if t >= e_cap and len(ends) < k:
                     break
             end_arr = np.array(ends)
             dt_arr = np.array(dts)
+            e_arr = np.array(e_ends)
         else:
             ctx0 = gpu.ctx_sum
             # np.arange with step b enumerates ctx0 + i*b exactly (int64)
@@ -617,15 +693,23 @@ class NodeSimulator:
             acc[0] = t0
             acc[1:] = dt_arr
             end_arr = np.cumsum(acc, out=acc)[1:]
+            # same left-fold trick for the energy epochs: elementwise
+            # (draw*dt)/b matches the per-iteration path's float ops, and
+            # the seeded cumsum matches its sequential accumulation
+            eacc = np.empty(k + 1)
+            eacc[0] = gpu.energy_epoch
+            eacc[1:] = draw * dt_arr / b
+            e_arr = np.cumsum(eacc, out=eacc)[1:]
             if e_cap is not math.inf and end_arr[-1] >= e_cap:
                 # keep iterations starting before the cap change: the first
                 # end >= e_cap is the last valid iteration's boundary
                 n = int(end_arr.searchsorted(e_cap, side="left")) + 1
                 end_arr = end_arr[:n]
                 dt_arr = dt_arr[:n]
+                e_arr = e_arr[:n]
         gpu.gen += 1
         gpu.plan = MacroPlan(gen=gpu.gen, end_times=end_arr, dts=dt_arr,
-                             capv=self.pm.cap_version[gpu.gid])
+                             e_ends=e_arr, capv=self.pm.cap_version[gpu.gid])
         first = end_arr[0]
         if first < self._next_due:
             self._next_due = first
@@ -639,6 +723,7 @@ class NodeSimulator:
         m = p.m
         delta = upto - m
         gpu.tok_epoch += delta
+        gpu.energy_epoch = float(p.e_ends[upto - 1])
         nb = len(gpu.active)
         if nb:
             add = delta * nb
@@ -703,6 +788,7 @@ class NodeSimulator:
             return                 # already ends at the in-flight boundary
         p.end_times = p.end_times[:j + 1]    # O(1) views
         p.dts = p.dts[:j + 1]
+        p.e_ends = p.e_ends[:j + 1]
         gpu.gen += 1
         p.gen = gpu.gen
         self._push(float(p.end_times[j]), "macro_done", (gpu.gid, gpu.gen))
@@ -733,12 +819,18 @@ class NodeSimulator:
         gpu.iterating = False
         done_any = False
         epoch = gpu.tok_epoch
+        e_epoch = gpu.energy_epoch
         for r in gpu.active:
-            tok = r.tokens_out + epoch - r.tok_mark   # inlined _fold
+            tok = r.tokens_out + epoch - r.tok_mark   # inlined token fold
             r.tokens_out = tok
             r.tok_mark = epoch
             if tok >= r.rec.output_tokens:
                 r.rec.finish = self.now
+                # energy folds ONLY at finish/leave (not at plan
+                # boundaries), mirroring the per-iteration path's fold
+                # instants so the float sums agree exactly
+                r.rec.energy_j += e_epoch - r.e_mark
+                r.e_mark = e_epoch
                 self.finished_count += 1
                 self.recent_req_tpot.append(self.now, r.rec.tpot)
                 done_any = True
@@ -766,18 +858,23 @@ class NodeSimulator:
                 dt += (self.cost.kv_bytes_per_token() * self._avg_ctx(gpu) *
                        len(gpu.active)) / (self.cost.gpu.hbm_bw *
                                            self.cost.gpu.mbu_decode)
-
-            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, chunk))
+            # fused-iteration energy split evenly across participants
+            # (chunk owner + riding decoders); charged on completion
+            de = (self.cost.power.joules("prefill", cap, dt)
+                  / (1 + len(gpu.active)))
+            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, chunk, de))
         else:
-            dt = self.cost.decode_step_time(len(gpu.active),
-                                            self._avg_ctx(gpu), cap)
-            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, 0))
+            b = len(gpu.active)
+            dt = self.cost.decode_step_time(b, self._avg_ctx(gpu), cap)
+            de = self.cost.power.joules("decode", cap, dt) / b
+            self._push(self.now + dt, "mixed_iter", (gpu.gid, dt, 0, de))
 
-    def _on_mixed_iter(self, gid: int, dt: float, chunk: int):
+    def _on_mixed_iter(self, gid: int, dt: float, chunk: int, de: float):
         gpu = self.gpus[gid]
         gpu.iterating = False
         if chunk and gpu.mixed_prefill:
             req, done_toks = gpu.mixed_prefill.popleft()
+            req.rec.energy_j += de
             done_toks += chunk
             if done_toks >= req.rec.input_tokens:
                 req.rec.prefill_done = self.now
@@ -791,6 +888,7 @@ class NodeSimulator:
             done_any = False
             for r in gpu.active:
                 r.tokens_out += 1
+                r.rec.energy_j += de
                 if r.tokens_out >= r.rec.output_tokens:
                     r.rec.finish = self.now
                     self.finished_count += 1
@@ -817,6 +915,10 @@ class NodeSimulator:
         return (self.ctrl_cfg.gpu_move_drain_s if self.ctrl_cfg else 3.0)
 
     def _on_ctrl(self):
+        if not self.pm.powered:
+            # powered off (standby / left the fleet): no sampling and no
+            # re-arm — a fleet join calls ``start()`` to resume the tick
+            return
         self.pm.tick(self.now)
         self.trace_caps.append((self.now, list(self.pm.effective),
                                 [g.role for g in self.gpus]))
@@ -840,14 +942,19 @@ class NodeSimulator:
             self._push(self.now + (self.ctrl_cfg.min_time_s
                                    if self.ctrl_cfg else 0.25), "ctrl")
 
-    def can_flip(self, direction: str) -> bool:
+    def can_flip(self, direction: str, allow_empty: bool = False) -> bool:
         """Whether a role flip in ``direction`` would leave the node with at
-        least the configured minimum of source-role GPUs."""
+        least the configured minimum of source-role GPUs. ``allow_empty``
+        (fleet-managed nodes only, d2p) lets the LAST decode GPU flip: its
+        batch migrates cross-node through the fleet's migration engine, and
+        later prefill completions route their KV out the same way."""
         if self.coalesced:
             return False
         if direction == "d2p":
-            return len(self.decode_gpus()) > (self.ctrl_cfg.min_decode_gpus
-                                              if self.ctrl_cfg else 1)
+            floor = (0 if allow_empty and self.migrator is not None
+                     else (self.ctrl_cfg.min_decode_gpus
+                           if self.ctrl_cfg else 1))
+            return len(self.decode_gpus()) > floor
         return len(self.prefill_gpus()) > (self.ctrl_cfg.min_prefill_gpus
                                            if self.ctrl_cfg else 1)
 
@@ -857,48 +964,48 @@ class NodeSimulator:
         controller's own GPU moves; completion is announced on the shared
         loop as a ``role_flip`` event with ``external=True`` so the
         coordinator can tell its own flips from the node controller's.
+        With a fleet migrator attached, a d2p flip may take the node's last
+        decode GPU (pinned-only traffic: its decode work leaves cross-node).
         Returns False if refused (coalesced node or at the role minimum)."""
-        if not self.can_flip(direction):
+        allow_empty = direction == "d2p"
+        if not self.can_flip(direction, allow_empty=allow_empty):
             return False
-        gid = self._start_role_switch(direction)
+        floor = (0 if allow_empty and self.migrator is not None else None)
+        gid = self._start_role_switch(direction, floor=floor)
         if gid is None:
             return False
         self._ext_flip_gids.add(gid)
         return True
 
-    def _start_role_switch(self, direction: str) -> Optional[int]:
+    def _start_role_switch(self, direction: str,
+                           floor: Optional[int] = None) -> Optional[int]:
         """Pick and drain one GPU toward the opposite role; returns its gid
-        (or None if refused at the role minimum)."""
+        (or None if refused at the role minimum — ``floor`` overrides the
+        configured minimum for fleet-requested flips)."""
         if direction == "d2p":
             cands = self.decode_gpus()
-            if len(cands) <= (self.ctrl_cfg.min_decode_gpus
-                              if self.ctrl_cfg else 1):
+            limit = floor if floor is not None else \
+                (self.ctrl_cfg.min_decode_gpus if self.ctrl_cfg else 1)
+            if len(cands) <= limit:
                 return None
             gid = min(cands, key=lambda i: len(self.gpus[i].active))
             gpu = self.gpus[gid]
             gpu.draining = True
             self._role_version += 1
-            # migrate its active requests to remaining decode GPUs
+            # migrate its active requests (and not-yet-merged joins — they
+            # would otherwise strand when consecutive drains leave no
+            # iteration to merge them) to remaining decode GPUs
             others = [i for i in self.decode_gpus() if i != gid]
-            if others and gpu.active:
-                for r in gpu.active:
-                    tgt = min(others, key=lambda i: len(self.gpus[i].active))
-                    r.decode_gpu = tgt
-                    self.gpus[tgt].pending_join.append(r)
-                    # fold the epoch delta first: the request leaves this
-                    # GPU's epoch domain with its exact token count
-                    ctx = r.rec.input_tokens + self._fold(gpu, r)
-                    gpu.ctx_sum -= ctx
-                    self._g_ctx_sum -= ctx
-                    self._g_ctx_n -= 1
-                gpu.active = []
-                if gpu.plan is not None:
-                    # the in-flight iteration still completes (and records
-                    # its TPOT entry) but nothing afterwards: the batch is
-                    # gone — same as the per-iteration path's orphaned event
-                    self._truncate_plan(gpu, self.now)
-                for i in others:
-                    self._kick_decode(self.gpus[i])
+            if others and (gpu.active or gpu.pending_join):
+                # the fold/truncate bookkeeping is the in-flight-boundary
+                # eviction; placement is least-loaded like a fresh join
+                self._place_on_decode(self.evict_decode_batch(gpu), others)
+            elif self.migrator is not None and (gpu.active or
+                                                gpu.pending_join):
+                # last decode GPU on the node: the batch (and any not-yet-
+                # merged joins) leaves over the node interconnect
+                self.migrator(self.evict_decode_batch(gpu), self, True,
+                              "role_flip")
             self._push(self.now + self._drain_s(), "drain_done", gid)
         else:
             cands = self.prefill_gpus()
@@ -921,6 +1028,16 @@ class NodeSimulator:
         gpu.draining = False
         gpu.role = "prefill" if gpu.role == "decode" else "decode"
         self._role_version += 1
+        if gpu.role == "prefill" and (gpu.active or gpu.pending_join):
+            # decode work landed on (or merged into) the GPU mid-drain —
+            # re-place it now that the role actually flips: intra-node if a
+            # decode GPU remains, else cross-node through the fleet
+            others = self.decode_gpus()
+            if others:
+                self._place_on_decode(self.evict_decode_batch(gpu), others)
+            elif self.migrator is not None:
+                self.migrator(self.evict_decode_batch(gpu), self, True,
+                              "role_flip")
         # Algorithm 1 line 14: uniform power after a GPU move
         t_ready, gpus, per = self.pm.distribute_uniform(self.now)
         self._push(t_ready, "uniform_ready", (gpus, per))
@@ -936,6 +1053,142 @@ class NodeSimulator:
             self._kick_prefill(gpu)
         else:
             self._kick_decode(gpu)
+
+    def _place_on_decode(self, reqs: List[SimRequest],
+                         others: List[int]) -> None:
+        """Re-place evicted decode requests on this node: each joins the
+        currently least-loaded target (same policy as a fresh join), then
+        every target is kicked once."""
+        for r in reqs:
+            tgt = min(others, key=lambda i: len(self.gpus[i].active))
+            r.decode_gpu = tgt
+            self.gpus[tgt].pending_join.append(r)
+        for i in others:
+            self._kick_decode(self.gpus[i])
+
+    # ---------------- fleet-facing (churn + migration) ----------------
+    def evict_decode_batch(self, gpu: GPU) -> List[SimRequest]:
+        """Remove a decode GPU's whole batch (active + not-yet-merged joins)
+        at the current iteration boundary, with exact token/energy folds and
+        the same plan truncation an intra-node drain migration performs.
+        The requests are the caller's (fleet migration engine) to place."""
+        out = []
+        for r in gpu.active:
+            ctx = r.rec.input_tokens + self._fold(gpu, r)
+            gpu.ctx_sum -= ctx
+            self._g_ctx_sum -= ctx
+            self._g_ctx_n -= 1
+            r.decode_gpu = None
+            out.append(r)
+        gpu.active = []
+        for r in gpu.pending_join:
+            r.decode_gpu = None
+            out.append(r)
+        gpu.pending_join.clear()
+        if gpu.plan is not None:
+            self._truncate_plan(gpu, self.now)
+        return out
+
+    def evict_for_leave(self):
+        """Graceful-leave eviction: everything movable right now. Returns
+        ``(no_kv, with_kv)`` — queued prefill work (re-routes for free, its
+        prompt was never processed) and KV-holding work (ring waiters +
+        decode batches; moving it costs a cross-node KV transfer). In-flight
+        prefill batches and ring transfers are NOT returned: their
+        completion events hand off through the ``leaving`` hooks."""
+        no_kv = list(self.q_prefill)
+        self.q_prefill.clear()
+        self.q_prefill_tokens = 0
+        with_kv = list(self.ring_wait)
+        self.ring_wait.clear()
+        for gpu in self.gpus:
+            if gpu.active or gpu.pending_join:
+                with_kv.extend(self.evict_decode_batch(gpu))
+        return no_kv, with_kv
+
+    def evict_for_failure(self) -> List[SimRequest]:
+        """Abrupt failure: every request the node holds, including those
+        living only in event payloads (in-flight prefill batches, in-flight
+        ring transfers). KV and generation progress are lost — the caller
+        resets and re-submits them. The node is marked ``defunct`` and every
+        subsequently dispatched event for it is dropped."""
+        reqs = list(self.q_prefill) + list(self.ring_wait) + \
+            list(self._transfers)
+        self.q_prefill.clear()
+        self.q_prefill_tokens = 0
+        self.ring_wait.clear()
+        self._transfers.clear()
+        self.ring_free = RING_SLOTS
+        for gpu in self.gpus:
+            if gpu.inflight_prefill:
+                reqs.extend(gpu.inflight_prefill)
+                gpu.inflight_prefill = None
+            for r in gpu.active:
+                self._fold(gpu, r)       # joules spent are spent
+                r.decode_gpu = None
+                reqs.append(r)
+            reqs.extend(gpu.pending_join)
+            for r in gpu.pending_join:
+                r.decode_gpu = None
+            gpu.active = []
+            gpu.pending_join.clear()
+            gpu.mixed_prefill.clear()
+            gpu.ctx_sum = 0
+            gpu.plan = None
+            gpu.gen += 1
+            gpu.busy = False
+            gpu.iterating = False
+            gpu.draining = False
+        self._g_ctx_sum = 0
+        self._g_ctx_n = 0
+        self._next_due = math.inf
+        self.defunct = True
+        return reqs
+
+    def adopt_decode(self, req: SimRequest) -> bool:
+        """Place a migrated-in request straight into the decode pool — its
+        KV arrived over the node interconnect, so no ring slot is involved.
+        Returns False when no live decode GPU has batch room (the fleet
+        retries or re-targets)."""
+        dgpus = self.decode_gpus()
+        if not dgpus:
+            return False
+        load = lambda i: (len(self.gpus[i].active)
+                          + len(self.gpus[i].pending_join))
+        gid = min(dgpus, key=load)
+        if load(gid) >= self.cost.max_decode_batch(
+                int(self._global_avg_ctx())):
+            return False
+        self._register(req)
+        req.decode_gpu = gid
+        gpu = self.gpus[gid]
+        gpu.pending_join.append(req)
+        self._kick_decode(gpu)
+        return True
+
+    def is_empty(self) -> bool:
+        """No request state left on the node (leave-drain completion)."""
+        return (not self.q_prefill and not self.ring_wait
+                and not self._transfers
+                and all(not g.busy and not g.active and not g.pending_join
+                        and not g.mixed_prefill for g in self.gpus))
+
+    def release_record(self, req: SimRequest) -> None:
+        """Hand a request's record over to whichever node it lands on next
+        (kept one-node-exact so per-node summaries stay meaningful). O(1):
+        the record stays in the list and summaries filter it out."""
+        if req.preregistered:
+            self._released_rids.add(req.rec.rid)
+            req.preregistered = False
+
+    def _register(self, req: SimRequest) -> None:
+        if req.preregistered:
+            return
+        req.preregistered = True
+        if req.rec.rid in self._released_rids:
+            self._released_rids.discard(req.rec.rid)   # still in the list
+        else:
+            self.records.append(req.rec)
 
     # ---------------- cluster-facing signals ----------------
     def queued_prefill_tokens(self) -> int:
@@ -984,6 +1237,35 @@ class NodeSimulator:
         toks = self.queued_prefill_tokens() + extra_tokens
         return toks / rate + self._queue_ttft_estimate()
 
+    def marginal_joules_per_token(self, in_tokens: int,
+                                  out_tokens: int) -> float:
+        """Marginal busy-draw energy price of serving one more request here:
+        (prefill batch joules + out_tokens decode-iteration joules at the
+        would-be batch size) / total tokens. The same power-curve/draw
+        arithmetic the per-request energy accounting integrates, evaluated
+        prospectively at the node's current caps and load — the signal the
+        ``joules`` router policy ranks on. A node with no live decode role
+        prices at infinity (its decode work would have to migrate out)."""
+        pre = self.prefill_gpus()
+        dec = self.decode_gpus()
+        if not pre or not dec:
+            return float("inf")
+        power = self.cost.power
+        cap_p = max(self.pm.effective[g] for g in pre)
+        t_p = self.cost.prefill_time(in_tokens, cap_p)
+        e_p = power.joules("prefill", cap_p, t_p)
+        # marginal decode: joining the least-loaded decode GPU grows its
+        # batch by one; the request pays a 1/b share of each iteration
+        load = lambda i: (len(self.gpus[i].active)
+                          + len(self.gpus[i].pending_join))
+        gid = min(dec, key=load)
+        b = load(gid) + 1
+        cap_d = self.pm.effective[gid]
+        ctx = int(self._global_avg_ctx())
+        dt_d = self.cost.decode_step_time(b, ctx, cap_d)
+        e_tok = power.joules("decode", cap_d, dt_d) / b
+        return (e_p + out_tokens * e_tok) / max(in_tokens + out_tokens, 1)
+
     def observe(self) -> Observation:
         """Current controller observation (also the coordinator's view —
         both MUST see the same metric definition)."""
@@ -1010,9 +1292,9 @@ class NodeSimulator:
     def submit(self, req: SimRequest):
         """Accept a request at the current time (called from the arrival
         event in single-node mode, or by the cluster router)."""
-        if not req.preregistered:
-            self.records.append(req.rec)
-            req.preregistered = True
+        assert not self.defunct and not self.leaving, \
+            "submit() to a node that left the fleet"
+        self._register(req)
         if self.coalesced:
             gpu = self.gpus[self.mixed_rr % self.n_gpus]
             self.mixed_rr += 1
@@ -1045,6 +1327,8 @@ class NodeSimulator:
         (``sync``) when the handler can read iteration-dependent state, and
         afterwards re-validates running plans against cap changes the
         handler may have made."""
+        if self.defunct:
+            return    # failed node: in-flight events die with it
         if self._macro and kind in self._SYNC_KINDS:
             self.sync()
         self.pm.tick(self.now)
@@ -1075,15 +1359,22 @@ class NodeSimulator:
         if self._macro:
             self._validate_plans()
 
+    def live_records(self) -> List[RequestRecord]:
+        """Records still owned by this node (released ones filtered out)."""
+        if not self._released_rids:
+            return self.records
+        return [r for r in self.records if r.rid not in self._released_rids]
+
     def summary(self) -> GoodputSummary:
-        duration = max((r.finish or self.now) for r in self.records) if \
-            self.records else self.now
+        records = self.live_records()
+        duration = max((r.finish or self.now) for r in records) if \
+            records else self.now
         if self.power_samples:
             avg_w = float(np.mean(np.fromiter(
                 (w for _, w in self.power_samples), dtype=np.float64)))
         else:
             avg_w = sum(self.pm.effective)
-        return summarize(self.records, duration, avg_w)
+        return summarize(records, duration, avg_w)
 
     def run(self, workload: Workload, horizon_s: float = 1e5) -> GoodputSummary:
         """Single-node entry point: drives a private event loop to completion

@@ -1,0 +1,359 @@
+"""Elastic fleet subsystem: membership churn (join/leave/fail) with
+facility-level power redistribution, the KV-aware cross-node migration
+engine, per-request energy accounting, TPU-v5e node wiring, and the
+joules router policy."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.costmodel import H100, MI300X, TPU_V5E
+from repro.core.events import EventLoop
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.goodput import RequestRecord
+from repro.core.power_manager import PowerManager
+from repro.core.simulator import NodeSimulator, SimRequest, Workload
+
+CFG = get_config("llama31_8b")
+
+
+def dyn(**kw):
+    return dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=False, **kw)
+
+
+def make_fleet(n_nodes=3, budget=4000.0, elastic=True, standby=(),
+               ctrl="default", shift=True, gpu_move=False, fcfg=None, **kw):
+    cs = ClusterSimulator(CFG, policy_4p4d(500), n_nodes,
+                          node_budget_w=budget,
+                          ctrl_cfg=dyn(ttft_slo=2.0) if ctrl == "default"
+                          else ctrl,
+                          cluster_cfg=ClusterConfig(
+                              allow_shift=shift, allow_gpu_move=gpu_move),
+                          **kw)
+    fm = FleetManager(cs, fcfg or FleetConfig(elastic=elastic),
+                      standby=standby)
+    return cs, fm
+
+
+# ---------------------------------------------------------------------------
+# PowerManager membership ops + EventLoop cancellation
+# ---------------------------------------------------------------------------
+
+def test_power_off_releases_everything():
+    pm = PowerManager(8, 4000.0, initial_caps=[500.0] * 8)
+    pm.set_cap(0.0, 0, 400.0)                 # lower in flight
+    released = pm.power_off(1.0)
+    assert released == pytest.approx(4000.0)
+    assert pm.budget == 0.0 and not pm.powered
+    assert pm.commanded == [0.0] * 8 and pm.effective == [0.0] * 8
+    assert not pm.pending and not pm.budget_op_inflight
+    assert pm._worst_case() == 0.0
+
+
+def test_power_on_uniform_caps_and_floor():
+    pm = PowerManager(8, 4000.0, initial_caps=[500.0] * 8)
+    pm.power_off(0.0)
+    absorbed = pm.power_on(1.0, 4400.0)
+    assert absorbed == pytest.approx(4400.0)
+    assert pm.effective == [550.0] * 8
+    pm.power_off(2.0)
+    with pytest.raises(ValueError):
+        pm.power_on(3.0, 100.0)               # below the 8 x 400 W floor
+
+
+def test_event_loop_cancel():
+    loop = EventLoop()
+    fired = []
+    loop.push(1.0, lambda k, p: fired.append((k, p)), "a")
+    token = loop.push(2.0, lambda k, p: fired.append((k, p)), "b")
+    loop.push(3.0, lambda k, p: fired.append((k, p)), "c")
+    loop.cancel(token)
+    loop.run(lambda: False)
+    assert [k for k, _ in fired] == ["a", "c"]
+    assert loop.now == 3.0                    # cancelled event kept the clock
+
+
+# ---------------------------------------------------------------------------
+# graceful leave: drain -> migrate -> power off -> redistribute
+# ---------------------------------------------------------------------------
+
+def test_leave_migrates_and_redistributes():
+    cs, fm = make_fleet()
+    fm.schedule_leave(6.0, 2)
+    wl = Workload.uniform(90, qps=7.0, in_tokens=4096, out_tokens=256,
+                          seed=4, ttft_slo=2.0)
+    s = cs.run(wl)
+    assert s.n_finished == 90
+    kinds = [k for _, k, _ in fm.churn_trace]
+    assert kinds == ["leave", "leave_done"]
+    assert len(fm.migration_trace) > 0, "a loaded node must migrate KV out"
+    # departed node is dark; its watts re-leveled onto the survivors
+    assert cs.nodes[2].pm.budget == 0.0
+    assert not cs.active[2]
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(min(cs.facility_budget_w,
+                          2 * cs.nodes[0].pm.budget_ceil_w))
+    # migrated records finished on (and are accounted to) surviving nodes
+    assert sum(len(nd.live_records()) for nd in cs.nodes) == 90
+    assert all(np.isfinite(r.energy_j) and r.energy_j > 0
+               for r in cs.records)
+
+
+def test_leave_mid_prefill_hands_off_and_powers_down():
+    """In-flight prefill batches at leave time finish locally, then their
+    fresh KV leaves over the interconnect; the node powers off only once
+    empty with no outbound transfer in flight."""
+    cs, fm = make_fleet()
+    # a large pinned prompt burst guarantees in-flight prefill at t=2.0
+    pinned = {2: Workload.uniform(20, qps=20.0, in_tokens=8192,
+                                  out_tokens=64, seed=1, ttft_slo=3.0)}
+    fm.schedule_leave(2.0, 2)
+    s = cs.run(Workload.uniform(40, qps=4.0, in_tokens=2048, out_tokens=128,
+                                seed=2, ttft_slo=2.0), pinned=pinned)
+    assert s.n_finished == 60
+    done = [t for t, k, n in fm.churn_trace if k == "leave_done"]
+    assert done and done[0] > 2.0
+    reasons = {r for _, _, _, r, _ in fm.migration_trace}
+    assert "leave" in reasons
+    assert cs.nodes[2].is_empty() and cs.nodes[2].defunct
+
+
+# ---------------------------------------------------------------------------
+# failure: state loss, requeue from scratch
+# ---------------------------------------------------------------------------
+
+def test_failure_requeues_from_scratch():
+    cs, fm = make_fleet()
+    fm.schedule_fail(6.0, 1)
+    wl = Workload.uniform(90, qps=7.0, in_tokens=4096, out_tokens=256,
+                          seed=4, ttft_slo=2.0)
+    s = cs.run(wl)
+    assert s.n_finished == 90
+    assert len(fm.requeue_trace) > 0, "a loaded node must lose work"
+    assert len(fm.migration_trace) == 0, "failures cannot migrate KV"
+    requeued = {rid for _, rid, _ in fm.requeue_trace}
+    by_rid = {r.rid: r for r in cs.records}
+    for rid in requeued:
+        # re-prefilled after the failure instant — TTFT pays the full price
+        assert by_rid[rid].prefill_done > 6.0
+        # joules burned before the failure are kept on the record
+        assert by_rid[rid].energy_j > 0
+    assert cs.nodes[1].defunct and cs.nodes[1].pm.budget == 0.0
+
+
+def test_failure_redistribution_elastic_vs_static():
+    def run(elastic):
+        cs, fm = make_fleet(elastic=elastic)
+        fm.schedule_fail(5.0, 2)
+        s = cs.run(Workload.uniform(120, qps=8.0, in_tokens=4096,
+                                    out_tokens=256, seed=4, ttft_slo=2.0))
+        return cs, s
+    cs_e, s_e = run(True)
+    cs_s, s_s = run(False)
+    # elastic re-levels the dead node's watts; static strands them
+    assert sum(nd.pm.budget for nd in cs_e.nodes) > \
+        sum(nd.pm.budget for nd in cs_s.nodes)
+    assert s_e.slo_attainment >= s_s.slo_attainment
+
+
+# ---------------------------------------------------------------------------
+# join: DISTRIBUTEUNIFORMPOWER at facility level (source-before-sink)
+# ---------------------------------------------------------------------------
+
+def test_standby_join_shrinks_survivors_first():
+    cs, fm = make_fleet(n_nodes=3, standby=(2,),
+                        facility_budget_w=12000.0)
+    # survivors idle at 4000 W each; facility has 4000 W headroom, but the
+    # uniform share for 3 nodes is 4000 — no shrink needed, grant immediate
+    fm.schedule_join(4.0, 2)
+    s = cs.run(Workload.uniform(90, qps=6.0, in_tokens=4096, out_tokens=256,
+                                seed=4, ttft_slo=2.0))
+    assert s.n_finished == 90
+    kinds = [k for _, k, _ in fm.churn_trace]
+    assert kinds == ["join", "join_done"]
+    assert cs.active[2] and cs.nodes[2].pm.powered
+    assert cs.nodes[2].pm.budget == pytest.approx(4000.0)
+    assert len(cs.nodes[2].records) > 0, "joiner must take routed traffic"
+    cs.assert_facility_invariant()
+
+
+def test_join_levels_down_overfull_survivors():
+    """Survivors sitting above the new uniform share must shrink (and their
+    shrinks must be IN FORCE) before the joiner powers on."""
+    cs, fm = make_fleet(n_nodes=2, standby=(1,), facility_budget_w=10000.0,
+                        node_budgets=[6000.0, 4000.0],
+                        policies=[policy_4p4d(750), policy_4p4d(500)])
+    fm.schedule_join(3.0, 1)
+    s = cs.run(Workload.uniform(60, qps=5.0, in_tokens=4096, out_tokens=256,
+                                seed=4, ttft_slo=2.0))
+    assert s.n_finished == 60
+    joined = [t for t, k, n in fm.churn_trace if k == "join_done"]
+    assert joined and joined[0] > 3.0, \
+        "join must wait for the survivors' cap lowers to take effect"
+    assert cs.nodes[0].pm.budget == pytest.approx(5000.0)
+    assert cs.nodes[1].pm.budget == pytest.approx(5000.0)
+    cs.assert_facility_invariant()
+
+
+# ---------------------------------------------------------------------------
+# pinned-only traffic role flips (the ROADMAP item migration unlocks)
+# ---------------------------------------------------------------------------
+
+def test_last_decode_gpu_flip_migrates_pinned_batch():
+    """With a fleet migrator attached, a node may flip its LAST decode GPU
+    to prefill: the pinned batch leaves cross-node and later prefills route
+    their KV out too — impossible before cross-node migration existed."""
+    cs, fm = make_fleet(n_nodes=2, shift=False)
+    node = cs.nodes[1]
+    # pin a decode-heavy stream so node 1 carries pinned-only decode work,
+    # plus a late wave that arrives AFTER the node has gone full-prefill
+    wl1 = Workload.uniform(24, qps=6.0, in_tokens=500, out_tokens=400,
+                           seed=6, tpot_slo=0.040)
+    late = Workload([(4.5 + 0.2 * i, 500, 200, 1.0, 0.040)
+                     for i in range(8)])
+    pinned = {1: Workload(wl1.entries + late.entries)}
+    cs._seed_arrivals(None, pinned)
+    for nd in cs.nodes:
+        nd.start()
+    cs.loop.push(0.0, cs._handle, "cluster_ctrl")
+    # let decode batches form, then flip decode->prefill down to zero
+    while cs.loop.heap and cs.loop.now < 4.0:
+        cs.loop.step()
+    flips = 0
+    while node.can_flip("d2p", allow_empty=True):
+        assert node.request_role_flip("d2p")
+        flips += 1
+    assert flips == 4, "all four decode GPUs must be flippable"
+    cs.loop.run(lambda: cs.n_unfinished() == 0)
+    assert all(r.finish is not None for r in cs.records)
+    reasons = {rec[3] for rec in fm.migration_trace}
+    assert "role_flip" in reasons, "the live batch must migrate out"
+    assert "no_decode_role" in reasons, \
+        "post-flip prefill completions must route their KV cross-node"
+    assert all(g.role == "prefill" for g in node.gpus)
+
+
+def test_can_flip_last_decode_requires_migrator():
+    sim = NodeSimulator(CFG, policy_4p4d(500), node_budget_w=4000.0,
+                        ctrl_cfg=dyn())
+    for _ in range(3):
+        assert sim.request_role_flip("d2p")
+        while sim.loop.heap:
+            sim.loop.step()
+    # at one decode GPU: refused without a migrator, allowed with one
+    assert not sim.can_flip("d2p", allow_empty=True)
+    sim.migrator = lambda *a: None
+    assert sim.can_flip("d2p", allow_empty=True)
+    assert not sim.can_flip("d2p")            # configured floor still holds
+
+
+# ---------------------------------------------------------------------------
+# router policies: joules vs capacity
+# ---------------------------------------------------------------------------
+
+def test_joules_router_ties_break_capacity_relative():
+    """Identical idle hardware prices identically — the joules policy must
+    then fall back to the capacity-relative load and avoid the node with
+    queued work, exactly like the capacity policy would."""
+    cs = ClusterSimulator(CFG, policy_4p4d(500), 2, node_budget_w=4000.0,
+                          router_policy="joules")
+    j0 = cs.nodes[0].marginal_joules_per_token(4096, 256)
+    j1 = cs.nodes[1].marginal_joules_per_token(4096, 256)
+    assert j0 == j1
+    for i in range(6):
+        cs.nodes[0].submit(SimRequest(RequestRecord(100 + i, 0.0, 8192, 16)))
+    picked = {cs.router.pick(0.0, cs.nodes).node_id for _ in range(4)}
+    assert picked == {1}
+
+
+def test_joules_router_prefers_cheaper_hardware():
+    """A TPU-v5e pool at 200 W caps prices a token below an MI300X pool at
+    500 W; the joules policy routes there while capacity routes to the
+    faster MI300X pool."""
+    cfg = get_config("qwen1_5_4b")          # fits the v5e HBM envelope
+    def run(policy):
+        cs = ClusterSimulator(cfg, policy_4p4d(500), 2,
+                              node_budget_w=4000.0,
+                              gpu_specs=[MI300X, TPU_V5E],
+                              router_policy=policy, seed=0)
+        assert cs.nodes[1].marginal_joules_per_token(2000, 128) < \
+            cs.nodes[0].marginal_joules_per_token(2000, 128)
+        s = cs.run(Workload.uniform(40, qps=3.0, in_tokens=2000,
+                                    out_tokens=128, seed=1))
+        assert s.n_finished == 40
+        return [len(nd.records) for nd in cs.nodes], s
+    counts_cap, s_cap = run("capacity")
+    counts_j, s_j = run("joules")
+    assert counts_cap[0] > counts_cap[1]
+    assert counts_j[1] > counts_j[0]
+    # the energy price signal must be realized, not just predicted
+    assert s_j.energy_per_good_token_j < s_cap.energy_per_good_token_j
+
+
+# ---------------------------------------------------------------------------
+# TPU-v5e wiring: mixed three-vendor cluster end-to-end
+# ---------------------------------------------------------------------------
+
+def test_mixed_mi300x_h100_tpu_cluster_routes_and_finishes():
+    """One shared StaticPolicy + default budgets must land correctly on all
+    three specs: caps clamp to each node's envelope and budgets derive from
+    the spec ceiling (a TPU-v5e node cannot hold MI300X watts)."""
+    cfg = get_config("qwen1_5_4b")
+    cs = ClusterSimulator(cfg, policy_4p4d(500), 3, node_budget_w=4000.0,
+                          gpu_specs=[MI300X, H100, TPU_V5E], seed=0)
+    assert [nd.pm.budget for nd in cs.nodes] == [4000.0, 4000.0, 1600.0]
+    assert cs.facility_budget_w == pytest.approx(9600.0)
+    assert cs.nodes[2].pm.effective == [200.0] * 8   # spec-clamped caps
+    assert cs.nodes[2].pm.min_cap == 110.0
+    # pin streams so every vendor actually serves; route the rest
+    pinned = {i: Workload.uniform(10, qps=2.0, in_tokens=1000, out_tokens=64,
+                                  seed=10 + i) for i in range(3)}
+    s = cs.run(Workload.uniform(30, qps=4.0, in_tokens=2000, out_tokens=64,
+                                seed=1), pinned=pinned)
+    assert s.n_finished == 60
+    assert all(len(nd.records) >= 10 for nd in cs.nodes)
+    assert all(np.isfinite(r.energy_j) and r.energy_j > 0
+               for r in cs.records)
+
+
+def test_arrivals_and_work_survive_a_fully_dark_fleet_window():
+    """Regression: with every node down (single-node fleet in a maintenance
+    window), routed arrivals and in-flight migrations must defer and retry
+    — not crash the router on an empty membership — and the rejoin must not
+    double-grant the watts a deferred re-offer still claims."""
+    cs, fm = make_fleet(n_nodes=1, shift=False)
+    fm.schedule_leave(1.0, 0)
+    fm.schedule_join(4.0, 0)
+    wl = Workload.uniform(12, qps=4.0, in_tokens=2048, out_tokens=64,
+                          seed=3, ttft_slo=2.0)
+    s = cs.run(wl)
+    assert s.n_finished == 12
+    kinds = [k for _, k, _ in fm.churn_trace]
+    assert kinds == ["leave", "leave_done", "join", "join_done"]
+    assert cs.nodes[0].pm.budget == pytest.approx(4000.0)
+    cs.assert_facility_invariant()
+
+
+# ---------------------------------------------------------------------------
+# elastic vs static under the same churn (fig11 in miniature)
+# ---------------------------------------------------------------------------
+
+def test_elastic_beats_static_under_churn():
+    def run(elastic):
+        cs, fm = make_fleet(elastic=elastic)
+        fm.schedule_leave(6.0, 2)
+        fm.schedule_join(18.0, 2)
+        wl = Workload.uniform(160, qps=9.0, in_tokens=4096, out_tokens=256,
+                              seed=4, ttft_slo=2.0)
+        s = cs.run(wl)
+        assert s.n_finished == 160
+        return s
+    s_e = run(True)
+    s_s = run(False)
+    assert s_e.slo_attainment >= s_s.slo_attainment
+    assert all(np.isfinite(x) for x in
+               (s_e.energy_per_good_token_j, s_s.energy_per_good_token_j))

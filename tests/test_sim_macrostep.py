@@ -16,6 +16,7 @@ from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
 from repro.core.controller import ControllerConfig, StaticPolicy, policy_4p4d
 from repro.core.costmodel import H100, MI300X
+from repro.core.fleet import FleetConfig, FleetManager
 from repro.core.simulator import MetricWindow, NodeSimulator, Workload
 
 CFG = get_config("llama31_8b")
@@ -36,9 +37,9 @@ def assert_identical(run):
         sims[fid] = sim
         summaries[fid] = s
         events[fid] = sim.loop.dispatched
-    rec_i = [(r.rid, r.arrival, r.prefill_done, r.finish)
+    rec_i = [(r.rid, r.arrival, r.prefill_done, r.finish, r.energy_j)
              for r in sims["iter"].records]
-    rec_m = [(r.rid, r.arrival, r.prefill_done, r.finish)
+    rec_m = [(r.rid, r.arrival, r.prefill_done, r.finish, r.energy_j)
              for r in sims["macro"].records]
     assert rec_i == rec_m
     assert dataclasses.asdict(summaries["iter"]) == \
@@ -174,6 +175,53 @@ def test_cluster_hetero_dyngpu_flip_identical():
         "scenario must exercise a coordinator-initiated mid-drain flip"
     # routing decisions (cross-node reads against macro-stepped state)
     assert res["iter"][0].router.trace == res["macro"][0].router.trace
+
+
+def test_fleet_churn_and_migration_identical():
+    """Elastic-fleet golden run: a node leave mid-run (cross-node KV
+    migration of mid-decode batches), an abrupt failure (state loss +
+    requeue), and a standby-style rejoin with facility-level power
+    redistribution — all while the coordinator shifts budgets. Macro plans
+    must truncate at every churn/migration boundary exactly where the
+    per-iteration path re-reads the world: per-request records (including
+    the accumulated energy_j), goodput summaries, and the fleet's own churn
+    and migration traces must match to the last bit."""
+    def run(fid):
+        cs = ClusterSimulator(
+            CFG, policy_4p4d(500), 3, node_budget_w=4000.0,
+            ctrl_cfg=ctrl(ttft_slo=2.0),
+            cluster_cfg=ClusterConfig(allow_shift=True),
+            seed=3, fidelity=fid)
+        fm = FleetManager(cs, FleetConfig(elastic=True))
+        fm.schedule_leave(8.0, 2)      # node 2 drains: mid-decode migration
+        fm.schedule_fail(15.0, 1)      # node 1 dies: requeue from scratch
+        fm.schedule_join(22.0, 2)      # node 2 returns: facility re-level
+        wl = Workload.uniform(260, qps=8.0, in_tokens=4096, out_tokens=256,
+                              seed=4, ttft_slo=2.0)
+        s = cs.run(wl)
+        return cs, fm, s
+
+    res = {}
+    for fid in ("iter", "macro"):
+        cs, fm, s = run(fid)
+        res[fid] = (cs, fm, s,
+                    [(r.rid, r.arrival, r.prefill_done, r.finish, r.energy_j)
+                     for r in cs.records])
+    it, ma = res["iter"], res["macro"]
+    assert it[3] == ma[3]
+    assert dataclasses.asdict(it[2]) == dataclasses.asdict(ma[2])
+    assert it[1].churn_trace == ma[1].churn_trace
+    assert it[1].migration_trace == ma[1].migration_trace
+    assert it[1].requeue_trace == ma[1].requeue_trace
+    assert it[0].shift_trace == ma[0].shift_trace
+    assert it[0].router.trace == ma[0].router.trace
+    # the scenario must actually exercise every churn path
+    kinds = [k for _, k, _ in it[1].churn_trace]
+    assert kinds == ["leave", "leave_done", "fail", "join", "join_done"]
+    assert len(it[1].migration_trace) > 0, "leave must migrate live KV"
+    assert len(it[1].requeue_trace) > 0, "failure must requeue lost work"
+    assert all(np.isfinite(e) and e > 0 for *_, e in it[3])
+    assert ma[0].loop.dispatched < it[0].loop.dispatched / 2
 
 
 # ---------------------------------------------------------------------------
