@@ -9,11 +9,9 @@ import subprocess
 import time
 
 from repro.configs import get_config
-from repro.core.controller import (ControllerConfig, StaticPolicy,
-                                   policy_4p4d, policy_5p3d,
-                                   policy_nonuniform)
+from repro.core.controller import ControllerConfig
 from repro.core.events import EventLoop
-from repro.core.simulator import NodeSimulator, Workload
+from repro.core.simulator import NodeSimulator
 
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 

@@ -25,8 +25,6 @@ be at least as good as static roles on the skewed heterogeneous scenario.
 """
 from __future__ import annotations
 
-import dataclasses
-
 from benchmarks.common import Timer, dyn_ctrl, save_artifact
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator

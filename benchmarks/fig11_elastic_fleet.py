@@ -68,9 +68,10 @@ def churn_schedule(fast: bool):
 
 def diurnal(fast: bool, seed: int) -> Workload:
     n1, n2, n3 = phase_sizes(fast)
-    mk = lambda n, qps, s: Workload.uniform(
-        n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
-        ttft_slo=TTFT_SLO_S, tpot_slo=0.040)
+    def mk(n: int, qps: float, s: int) -> Workload:
+        return Workload.uniform(
+            n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
+            ttft_slo=TTFT_SLO_S, tpot_slo=0.040)
     return Workload.phased_mix(
         [mk(n1, TROUGH_QPS, seed), mk(n2, PEAK_QPS, seed + 1),
          mk(n3, TROUGH_QPS, seed + 2)], name="diurnal")

@@ -9,11 +9,11 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Timer, save_artifact, sim_run
-from repro.core.controller import policy_4p4d, policy_nonuniform
-from repro.core.simulator import MAX_PREFILL_BATCH_TOKENS, Workload
 from repro.configs import get_config
+from repro.core.controller import policy_4p4d, policy_nonuniform
 from repro.core.costmodel import MI300X, CostModel
 from repro.core.power_model import mi300x
+from repro.core.simulator import MAX_PREFILL_BATCH_TOKENS, Workload
 
 
 def main(fast: bool = False):

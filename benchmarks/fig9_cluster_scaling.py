@@ -28,7 +28,7 @@ import time
 from benchmarks.common import Timer, dyn_ctrl, save_artifact
 from repro.configs import get_config
 from repro.core.cluster import ClusterConfig, ClusterSimulator
-from repro.core.controller import StaticPolicy, policy_4p4d
+from repro.core.controller import policy_4p4d
 from repro.core.simulator import Workload
 
 NODE_BUDGET_W = 4000.0          # power-constrained node (paper Section 5 regime)

@@ -3,7 +3,6 @@ synthetic data, then generate greedily with the prefill/decode API.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config

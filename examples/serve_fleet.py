@@ -42,9 +42,10 @@ def main():
           f"({len(cluster.nodes)} nodes x 4000 W)")
 
     # diurnal arrivals: trough, peak, trough
-    mk = lambda n, qps, s: Workload.uniform(
-        n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
-        ttft_slo=2.0, tpot_slo=0.040)
+    def mk(n, qps, s):
+        return Workload.uniform(
+            n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
+            ttft_slo=2.0, tpot_slo=0.040)
     wl = Workload.phased_mix([mk(60, 4.0, 1), mk(160, 10.0, 2),
                               mk(60, 4.0, 3)], name="diurnal")
 

@@ -1,0 +1,44 @@
+"""simcheck: repo-specific static analysis + runtime invariant sanitizer.
+
+Every headline number this repo produces rests on invariants that used to
+be enforced only by convention: power budgets are conserved across
+shrink/commit/grow at every hierarchy level, events are causal on the
+shared ``EventLoop``, KV for an in-flight request lives on exactly one
+live GPU, and the macro planner's float arithmetic exactly mirrors the
+per-iteration path. This package machine-checks them, in two coupled
+halves:
+
+* **Static half** (``repro.analysis.check.rules``): an AST lint pass with
+  repo-specific rule codes RC001-RC005, run as
+  ``python -m repro.analysis.check src/``. Violations are reported as
+  ``file:line RCnnn severity message``; grandfathered findings live in a
+  checked-in baseline (``simcheck-baseline.txt``) where every entry
+  carries a justification comment.
+
+* **Runtime half** (``repro.analysis.check.sanitize``): an
+  ``InvariantSanitizer`` the simulator core threads through
+  ``EventLoop`` / ``PowerManager`` / ``NodeSimulator`` /
+  ``ClusterSimulator`` / ``FleetManager`` when ``RAPID_SANITIZE=1`` (or
+  ``sanitize=True``). It validates hierarchical power conservation
+  (including in-flight budget ops), monotone clock/causality, single
+  residency of KV-holding requests, and per-request energy against the
+  integrated worst-case node power — at every event dispatch.
+
+The static rules encode the conventions; the sanitizer catches what
+static analysis cannot prove. Together they are the correctness
+scaffolding that makes aggressive refactors of ``core/`` safe.
+"""
+from repro.analysis.check.baseline import load_baseline, write_baseline
+from repro.analysis.check.rules import Finding, Severity, check_paths, check_source
+from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
+
+__all__ = [
+    "Finding",
+    "InvariantSanitizer",
+    "Severity",
+    "check_paths",
+    "check_source",
+    "load_baseline",
+    "sanitize_enabled",
+    "write_baseline",
+]

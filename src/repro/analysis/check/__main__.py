@@ -1,0 +1,59 @@
+"""simcheck CLI: ``python -m repro.analysis.check src/``.
+
+Exit status: 0 when every finding is either absent or suppressed by the
+baseline; 1 when new findings exist (CI fails on new findings only, so
+the baseline is the explicit, reviewable debt list).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.check.baseline import (DEFAULT_BASELINE, load_baseline,
+                                           split_by_baseline, write_baseline)
+from repro.analysis.check.rules import check_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Repo-specific static analysis for the power-capped "
+                    "simulator core (rules RC001-RC005).")
+    ap.add_argument("paths", nargs="+", help="files or directories to check")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(entries still need human justification)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    args = ap.parse_args(argv)
+
+    findings, n_files = check_paths(args.paths)
+    baseline_path = Path(args.baseline)
+
+    if args.update_baseline:
+        n = write_baseline(baseline_path, findings)
+        print(f"simcheck: wrote {n} baseline entries to {baseline_path}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(baseline_path)
+    new, suppressed, stale = split_by_baseline(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    for fp in sorted(stale):
+        print(f"simcheck: stale baseline entry (fix landed? delete it): {fp}")
+    if not args.quiet:
+        print(f"simcheck: {n_files} files, {len(new)} new finding(s), "
+              f"{len(suppressed)} baselined, {len(stale)} stale baseline "
+              f"entr{'y' if len(stale) == 1 else 'ies'}")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

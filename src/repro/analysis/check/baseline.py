@@ -1,0 +1,68 @@
+"""Baseline (grandfathered-findings) file for the simcheck static pass.
+
+Format — one fingerprint per line, ``#`` comments and blank lines
+ignored; every entry is expected to carry a trailing justification
+comment explaining why the finding is intentional:
+
+    RC004 repro/core/simulator.py::NodeSimulator.run::_push(t)  # seeds at t>=0 before now advances
+
+Fingerprints are line-number-free (``rule path::qualname::token``) so
+they survive unrelated edits; a stale entry (no longer matching any
+finding) is reported so the baseline shrinks over time instead of
+accreting.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.check.rules import Finding
+
+DEFAULT_BASELINE = "simcheck-baseline.txt"
+
+
+def load_baseline(path: Path) -> Set[str]:
+    """Fingerprints in the baseline file (missing file = empty baseline)."""
+    if not path.exists():
+        return set()
+    entries: Set[str] = set()
+    for line in path.read_text().splitlines():
+        line = line.split("#", 1)[0].strip()
+        if line:
+            entries.add(line)
+    return entries
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> int:
+    """Write every finding's fingerprint as a fresh baseline. Each entry
+    gets a TODO-justify comment — the review gate is that a human replaces
+    it with the actual reason the finding is intentional."""
+    lines = [
+        "# simcheck baseline: grandfathered findings, one fingerprint per",
+        "# line. Every entry MUST carry a trailing comment justifying why",
+        "# the finding is intentional. Regenerate candidates with",
+        "#   python -m repro.analysis.check src/ --update-baseline",
+        "# (then justify or fix each entry before committing).",
+        "",
+    ]
+    n = 0
+    for f in sorted(set(f.fingerprint for f in findings)):
+        lines.append(f"{f}  # TODO: justify or fix")
+        n += 1
+    path.write_text("\n".join(lines) + "\n")
+    return n
+
+
+def split_by_baseline(findings: List[Finding], baseline: Set[str]) \
+        -> Tuple[List[Finding], List[Finding], Set[str]]:
+    """(new, suppressed, stale-baseline-entries)."""
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    hit: Set[str] = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            suppressed.append(f)
+            hit.add(f.fingerprint)
+        else:
+            new.append(f)
+    return new, suppressed, baseline - hit

@@ -1,0 +1,508 @@
+"""AST lint rules for the power-capped simulator core (the static half).
+
+Rule codes (each encodes a convention the simulator's correctness rests
+on; see EXPERIMENTS.md "Invariants & static checks"):
+
+RC001  PowerManager budget/cap state may only be written through the
+       conservation API. ``budget``/``_budget_target`` writes are legal
+       only inside ``shrink_budget``/``commit_budget``/``grow_budget``/
+       ``power_on``/``power_off`` (+ ``__init__``); ``commanded``/
+       ``effective`` writes only inside ``set_cap``/``tick``/
+       ``power_on``/``power_off`` (+ ``__init__``). Everything else —
+       a coordinator poking ``node.pm.budget``, a test helper "fixing"
+       a cap — silently breaks hierarchical power conservation.
+
+RC002  No wall clock and no unseeded randomness inside ``core/``:
+       ``time.time``/``monotonic``/``perf_counter``, ``datetime.now``-
+       family calls, bare ``random.*``, and global-state ``np.random.*``
+       (anything but ``default_rng``/``Generator``/``SeedSequence``) all
+       break the determinism the golden macro-step tests rest on.
+
+RC003  No float ``+=`` accumulation loops over per-iteration quantities
+       in ``core/simulator.py``/``core/fleet.py``. Per-iteration times
+       and energies must accumulate via the cumsum-as-left-fold idiom
+       (``acc[0] = seed; np.cumsum(acc)``, or the matching scalar
+       ``x = x + dt`` chain) — that is what keeps ``energy_j`` and every
+       timestamp bit-identical between ``fidelity="iter"`` and
+       ``"macro"``. A loop-invariant float accumulator written with
+       ``+=`` is the tell-tale of a re-derivation that will drift.
+
+RC004  Every ``EventLoop`` post/schedule callsite must pass a time
+       ``>= now``. An event pushed into the past makes the shared clock
+       run backwards for every sibling node on the loop. The checker
+       accepts time expressions that syntactically involve ``now`` (or
+       locals derived from ``now`` / the PowerManager time-returning
+       API); anything else must be justified in the baseline.
+
+RC005  Public ``core/`` APIs are fully type-annotated (parameters and
+       return). The policy-core extraction (ROADMAP item 5) refactors
+       against these signatures; unannotated boundaries are where
+       refactors silently change types.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import enum
+import re
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+
+class Severity(enum.Enum):
+    ERROR = "error"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                 # normalized, repro/... when under a repro tree
+    line: int
+    col: int
+    severity: Severity
+    message: str
+    token: str                # stable content token for baseline matching
+    qualname: str             # enclosing Class.method / function / <module>
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        return f"{self.rule} {self.path}::{self.qualname}::{self.token}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.severity.value}] {self.message}")
+
+
+# --------------------------------------------------------------------------
+# RC001 tables: the conservation API of core.power_manager.PowerManager
+# --------------------------------------------------------------------------
+BUDGET_ATTRS = frozenset({"budget", "_budget_target"})
+BUDGET_WRITERS = frozenset({
+    "__init__", "shrink_budget", "commit_budget", "grow_budget",
+    "power_on", "power_off",
+})
+CAP_ATTRS = frozenset({"commanded", "effective"})
+CAP_WRITERS = frozenset({"__init__", "set_cap", "tick", "power_on",
+                         "power_off"})
+
+# RC002 tables
+WALLCLOCK_CALLS = frozenset({
+    "time.time", "time.monotonic", "time.perf_counter", "time.time_ns",
+    "time.monotonic_ns", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today", "date.today",
+})
+SEEDED_NP_RANDOM = frozenset({"default_rng", "Generator", "SeedSequence",
+                              "PCG64", "Philox"})
+
+# RC004: PowerManager methods documented to return an enforcement-ready
+# time >= the ``now`` they were called with.
+TIME_RETURNING = frozenset({"shift", "shrink_budget", "distribute_uniform",
+                            "set_cap"})
+
+# RC003: names that smell like per-iteration float quantities (times,
+# energies, watts). Integer counters (tokens, ctx sums, queue depths) are
+# deliberately NOT matched — integer accumulation is exact.
+_FLOAT_ACC_RE = re.compile(
+    r"(^|_)(t|e|dt|de|ts|time|energy|joule|watt|budget|end|ends)($|_)"
+    r"|(_s|_w|_j)$")
+
+
+def _norm_path(path: Path) -> str:
+    """Stable path key: relative to the ``repro`` package root when the
+    file lives under one (so baselines survive being run from any cwd or
+    absolute path), else the path as given with forward slashes."""
+    parts = path.as_posix().split("/")
+    for i, part in enumerate(parts):
+        if part == "repro" and i + 1 < len(parts):
+            return "/".join(parts[i:])
+    return path.as_posix()
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _mentions_now(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id == "now":
+            return True
+        if isinstance(n, ast.Attribute) and n.attr == "now":
+            return True
+    return False
+
+
+def _target_names(target: ast.AST) -> Set[str]:
+    """Names bound by a for-loop target (tuple targets included)."""
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: Path, source: str):
+        self.raw_path = path
+        self.path = _norm_path(path)
+        self.source = source
+        self.findings: List[Finding] = []
+        self.class_stack: List[str] = []
+        self.func_stack: List[str] = []
+        self.loop_targets: List[Set[str]] = []   # one entry per For loop
+        self.in_while = 0
+        # module import aliases (RC002)
+        self.module_aliases: dict = {}           # local name -> module path
+        parts = self.path.split("/")
+        self.in_core = "core" in parts
+        self.in_power_manager = parts[-1] == "power_manager.py"
+        self.rc003_scope = (self.in_core
+                           and parts[-1] in ("simulator.py", "fleet.py"))
+
+    # ---------------- plumbing ----------------
+    @property
+    def qualname(self) -> str:
+        scope = self.class_stack + self.func_stack
+        return ".".join(scope) if scope else "<module>"
+
+    def add(self, rule: str, node: ast.AST, message: str, token: str,
+            severity: Severity = Severity.ERROR) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), severity=severity,
+            message=message, token=token, qualname=self.qualname))
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_rc005(node)
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_For(self, node: ast.For) -> None:
+        self.loop_targets.append(_target_names(node.target))
+        self.generic_visit(node)
+        self.loop_targets.pop()
+
+    def visit_While(self, node: ast.While) -> None:
+        self.in_while += 1
+        self.generic_visit(node)
+        self.in_while -= 1
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.module_aliases[alias.asname or alias.name.split(".")[0]] = \
+                alias.name
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module:
+            for alias in node.names:
+                self.module_aliases[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+        self.generic_visit(node)
+
+    # ---------------- RC001 ----------------
+    def _rc001_target(self, target: ast.AST) -> None:
+        # x.budget = / x._budget_target =
+        if isinstance(target, ast.Attribute) and target.attr in BUDGET_ATTRS:
+            self._rc001_check(target, target.attr, BUDGET_WRITERS)
+        elif isinstance(target, ast.Attribute) and target.attr in CAP_ATTRS:
+            # rebinding the whole cap list (x.effective = [...])
+            self._rc001_check(target, target.attr, CAP_WRITERS)
+        elif (isinstance(target, ast.Subscript)
+              and isinstance(target.value, ast.Attribute)
+              and target.value.attr in CAP_ATTRS):
+            # x.commanded[g] = / x.effective[g] =
+            self._rc001_check(target, target.value.attr, CAP_WRITERS)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._rc001_target(elt)
+
+    def _rc001_check(self, node: ast.AST, attr: str,
+                     writers: frozenset) -> None:
+        inside_api = (self.in_power_manager
+                      and self.class_stack == ["PowerManager"]
+                      and bool(self.func_stack)
+                      and self.func_stack[0] in writers)
+        if inside_api:
+            return
+        kind = "budget" if attr in BUDGET_ATTRS else "cap"
+        api = sorted(writers - {"__init__"})
+        self.add("RC001", node,
+                 f"write to PowerManager {kind} state ({attr!r}) outside "
+                 f"the conservation API ({', '.join(api)}) — power "
+                 f"conservation cannot be audited around it",
+                 token=ast.unparse(node))
+
+    # ---------------- RC002 ----------------
+    def _rc002_call(self, node: ast.Call) -> None:
+        if not self.in_core:
+            return
+        dotted = _dotted(node.func)
+        if dotted is None:
+            return
+        root = dotted.split(".")[0]
+        resolved = self.module_aliases.get(root)
+        # normalize numpy aliases: np.random.X -> numpy.random.X
+        if resolved == "numpy" or root in ("numpy", "np"):
+            rest = dotted.split(".")[1:]
+            if len(rest) >= 2 and rest[0] == "random" \
+                    and rest[1] not in SEEDED_NP_RANDOM:
+                self.add("RC002", node,
+                         f"unseeded global-state numpy randomness "
+                         f"({dotted}) in core/ — breaks the determinism "
+                         f"the golden macro-step tests rest on; use "
+                         f"np.random.default_rng(seed)",
+                         token=dotted)
+            return
+        if resolved == "random" or root == "random":
+            if "." in dotted:
+                self.add("RC002", node,
+                         f"bare random.* call ({dotted}) in core/ — "
+                         f"unseeded global randomness; use "
+                         f"np.random.default_rng(seed)",
+                         token=dotted)
+            return
+        if dotted in WALLCLOCK_CALLS or (
+                resolved and any(dotted.replace(root, resolved, 1) == w
+                                 for w in WALLCLOCK_CALLS)):
+            self.add("RC002", node,
+                     f"wall-clock read ({dotted}) in core/ — simulated "
+                     f"time must come from the EventLoop clock",
+                     token=dotted)
+
+    # ---------------- RC003 ----------------
+    def _rc003(self, node: ast.AugAssign) -> None:
+        if not self.rc003_scope or not isinstance(node.op, ast.Add):
+            return
+        if not self.loop_targets and not self.in_while:
+            return
+        target = node.target
+        # the accumulated-into name: last attribute component or bare name
+        if isinstance(target, ast.Attribute):
+            name = target.attr
+        elif isinstance(target, ast.Name):
+            name = target.id
+        else:
+            return
+        if not _FLOAT_ACC_RE.search(name):
+            return
+        # a target that depends on the innermost for-loop variables is a
+        # per-item write (one += per request), not an accumulation across
+        # iterations — exempt
+        loop_vars: Set[str] = set()
+        for tv in self.loop_targets:
+            loop_vars |= tv
+        if loop_vars & _names_in(target):
+            return
+        self.add("RC003", node,
+                 f"float '+=' accumulation of per-iteration quantity "
+                 f"{name!r} inside a loop — use the cumsum-as-left-fold "
+                 f"idiom (seeded np.cumsum, or the scalar 'x = x + dt' "
+                 f"chain mirroring it) so iter/macro stay bit-identical",
+                 token=ast.unparse(node))
+
+    # ---------------- RC004 ----------------
+    def _rc004_call(self, node: ast.Call, fn_node: Optional[ast.AST]) -> None:
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            return
+        dotted = _dotted(func) or ""
+        is_loop_push = func.attr == "push" and "loop" in dotted.split(".")
+        is_node_push = func.attr == "_push"
+        if not (is_loop_push or is_node_push) or not node.args:
+            return
+        t_arg = node.args[0]
+        if self._time_safe(t_arg, fn_node):
+            return
+        self.add("RC004", node,
+                 f"event scheduled with time {ast.unparse(t_arg)!r} not "
+                 f"provably >= now — an event pushed into the past runs "
+                 f"the shared clock backwards for every node on the loop",
+                 token=f"{func.attr}({ast.unparse(t_arg)})")
+
+    def _time_safe(self, expr: ast.AST, fn_node: Optional[ast.AST],
+                   seen: Optional[Set[str]] = None) -> bool:
+        if _mentions_now(expr):
+            return True
+        if isinstance(expr, ast.Call):
+            dotted = _dotted(expr.func) or ""
+            if dotted == "max":
+                return any(self._time_safe(a, fn_node, seen)
+                           for a in expr.args)
+            if dotted.split(".")[-1] in TIME_RETURNING:
+                return True
+            if dotted in ("float", "int") and expr.args:
+                return self._time_safe(expr.args[0], fn_node, seen)
+        if isinstance(expr, ast.Name) and fn_node is not None:
+            seen = seen or set()
+            if expr.id in seen:
+                return True          # self-referential update (t = max(t, x))
+            seen.add(expr.id)
+            assigns = self._local_assigns(fn_node, expr.id)
+            if assigns:
+                return all(self._time_safe(a, fn_node, seen)
+                           for a in assigns)
+        return False
+
+    @staticmethod
+    def _local_assigns(fn_node: ast.AST, name: str) -> List[ast.AST]:
+        """RHS expressions assigned to ``name`` in this function body
+        (tuple unpacking maps the whole RHS to every unpacked name — a
+        call to a time-returning API covers all its outputs)."""
+        out: List[ast.AST] = []
+        for n in ast.walk(fn_node):
+            if isinstance(n, ast.Assign):
+                for tgt in n.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == name:
+                        out.append(n.value)
+                    elif isinstance(tgt, (ast.Tuple, ast.List)):
+                        names = [e.id for e in tgt.elts
+                                 if isinstance(e, ast.Name)]
+                        if name in names:
+                            if isinstance(n.value, (ast.Tuple, ast.List)) \
+                                    and len(n.value.elts) == len(tgt.elts):
+                                out.append(
+                                    n.value.elts[names.index(name)]
+                                    if len(names) == len(tgt.elts)
+                                    else n.value)
+                            else:
+                                out.append(n.value)
+            elif isinstance(n, ast.AugAssign):
+                if isinstance(n.target, ast.Name) and n.target.id == name:
+                    out.append(n.value)
+        return out
+
+    # ---------------- RC005 ----------------
+    def _check_rc005(self, node: ast.FunctionDef) -> None:
+        if not self.in_core:
+            return
+        if self.func_stack:
+            return                    # nested def: not API surface
+        name = node.name
+        public = not name.startswith("_") or name == "__init__"
+        if not public:
+            return
+        if self.class_stack and self.class_stack[0].startswith("_"):
+            return                    # private class
+        args = node.args
+        missing: List[str] = []
+        positional = args.posonlyargs + args.args
+        skip_first = bool(self.class_stack) and not any(
+            isinstance(d, ast.Name) and d.id == "staticmethod"
+            for d in node.decorator_list)
+        for i, a in enumerate(positional):
+            if skip_first and i == 0:
+                continue              # self / cls
+            if a.annotation is None:
+                missing.append(a.arg)
+        for a in args.kwonlyargs:
+            if a.annotation is None:
+                missing.append(a.arg)
+        if args.vararg is not None and args.vararg.annotation is None:
+            missing.append("*" + args.vararg.arg)
+        if args.kwarg is not None and args.kwarg.annotation is None:
+            missing.append("**" + args.kwarg.arg)
+        needs_return = name != "__init__" and node.returns is None
+        if not missing and not needs_return:
+            return
+        what = []
+        if missing:
+            what.append(f"parameters {', '.join(missing)}")
+        if needs_return:
+            what.append("return type")
+        self.add("RC005", node,
+                 f"public core/ API {self.qualname + '.' if self.class_stack else ''}"
+                 f"{name} missing annotations: {'; '.join(what)}",
+                 token=f"def {name}")
+
+    # ---------------- dispatch ----------------
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            self._rc001_target(tgt)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._rc001_target(node.target)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._rc001_target(node.target)
+        self._rc003(node)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        self._rc002_call(node)
+        self.generic_visit(node)
+
+
+def check_source(source: str, path: Path) -> List[Finding]:
+    """Run every rule over one file's source; returns findings."""
+    tree = ast.parse(source, filename=str(path))
+    checker = _Checker(path, source)
+    checker.visit(tree)
+    # RC004 needs the enclosing function for local dataflow: do a second
+    # pass that walks functions and their calls together.
+    _rc004_pass(tree, checker)
+    checker.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return checker.findings
+
+
+def _rc004_pass(tree: ast.Module, checker: _Checker) -> None:
+    def walk(node: ast.AST, fn: Optional[ast.AST],
+             cls_stack: List[str], fn_stack: List[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                walk(child, fn, cls_stack + [child.name], fn_stack)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                walk(child, child, cls_stack, fn_stack + [child.name])
+            else:
+                if isinstance(child, ast.Call):
+                    checker.class_stack = cls_stack
+                    checker.func_stack = fn_stack
+                    checker._rc004_call(child, fn)
+                walk(child, fn, cls_stack, fn_stack)
+    walk(tree, None, [], [])
+    checker.class_stack = []
+    checker.func_stack = []
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def check_paths(paths: Sequence[str]) -> Tuple[List[Finding], int]:
+    """Check every .py file under ``paths``; returns (findings, n_files)."""
+    findings: List[Finding] = []
+    n = 0
+    for path in iter_py_files(paths):
+        n += 1
+        findings.extend(check_source(path.read_text(), path))
+    return findings, n

@@ -1,0 +1,257 @@
+"""Runtime invariant sanitizer for the simulator core (the dynamic half).
+
+Static rules (``repro.analysis.check.rules``) catch conventions broken in
+the source; this module catches them broken in *execution* — the regime
+arXiv:2506.05508 shows dominates disaggregated-serving fidelity: mid-drain
+role flips, facility re-leveling on churn, migrations racing failures.
+
+``InvariantSanitizer`` hooks the shared ``EventLoop`` and validates, at
+every event dispatch:
+
+* **Hierarchical power conservation** — ``assert_facility_invariant``
+  generalized to every level: per GPU (caps inside the spec envelope,
+  or zero when powered off), per node (worst-case draw
+  ``sum(max(commanded, effective))`` within the node budget, in-flight
+  budget shrinks counted at the old budget), per facility (node budgets
+  sum under the facility budget).
+* **Monotone clock / causality** — no event is pushed with a timestamp
+  in the past (which would run the shared clock backwards for every
+  sibling node), and the dispatch clock never decreases.
+* **KV single-residency** — a request lives in at most ONE container
+  (prefill queue, in-flight prefill batch, ring wait, in-flight ring
+  transfer, decode batch, pending join) across all live nodes; a
+  decode-resident request's ``decode_gpu`` matches the GPU that holds
+  it; defunct nodes hold nothing. Requests mid-migration live only in
+  event payloads (zero residency) — that is the only legal "nowhere".
+* **Energy conservation** — total per-request ``energy_j`` charged so
+  far never exceeds the integrated worst-case fleet power
+  (``sum(max(commanded, effective))`` integrated between dispatches)
+  plus the prepay allowance for in-flight prefill batches (their energy
+  is charged up front at kick time).
+
+Enabling: ``RAPID_SANITIZE=1`` in the environment, or ``sanitize=True``
+passed to ``EventLoop`` / ``NodeSimulator`` / ``ClusterSimulator`` /
+``FleetManager``. Disabled (the default), the only residue is a
+``sanitizer is None`` check per event — the macro-path throughput of
+``benchmarks/sim_throughput.py`` is unaffected.
+
+Violations raise ``InvariantViolation`` (an ``AssertionError`` subclass,
+so test suites treating invariant failures as assertion failures keep
+working) at the exact dispatch where the invariant first broke.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+EPS_W = 1e-6            # watts tolerance (matches the inline asserts)
+EPS_T = 1e-9            # seconds tolerance for causality
+
+
+class InvariantViolation(AssertionError):
+    """A simulator invariant broke at runtime (sanitizer mode)."""
+
+
+def sanitize_enabled(override: Optional[bool] = None) -> bool:
+    """Resolve the sanitizer switch: an explicit ``sanitize=`` argument
+    wins; otherwise the ``RAPID_SANITIZE`` environment variable."""
+    if override is not None:
+        return override
+    return os.environ.get("RAPID_SANITIZE", "").lower() in (
+        "1", "true", "yes", "on", "full")
+
+
+class InvariantSanitizer:
+    """Event-dispatch-time validator for one ``EventLoop``'s participants.
+
+    Participants register once (``attach_node`` / ``attach_cluster`` /
+    ``attach_fleet``); thereafter the loop calls ``check_push`` on every
+    schedule and ``after_dispatch`` after every handled event. All state
+    is read-only introspection of the registered objects — the sanitizer
+    never mutates simulation state, so enabling it cannot change results
+    (bit-identity with sanitizer off is part of its own test suite).
+    """
+
+    def __init__(self) -> None:
+        self.cluster: Optional[Any] = None      # ClusterSimulator
+        self.node: Optional[Any] = None         # standalone NodeSimulator
+        self.fleet: Optional[Any] = None        # FleetManager
+        self.checks = 0                         # dispatches validated
+        # worst-case-power integral state (energy conservation)
+        self._last_t = 0.0
+        self._power_sum_w = 0.0
+        self._energy_int_j = 0.0
+
+    # ---------------- registration ----------------
+    def attach_cluster(self, cluster: Any) -> None:
+        self.cluster = cluster
+
+    def attach_node(self, node: Any) -> None:
+        self.node = node
+
+    def attach_fleet(self, fleet: Any) -> None:
+        self.fleet = fleet
+
+    def _nodes(self) -> List[Any]:
+        if self.cluster is not None:
+            return list(self.cluster.nodes)
+        if self.node is not None:
+            return [self.node]
+        return []
+
+    # ---------------- hook: schedule-time causality ----------------
+    def check_push(self, now: float, t: float, kind: str) -> None:
+        if t < now - EPS_T:
+            raise InvariantViolation(
+                f"causality: event {kind!r} pushed at t={t!r} < now={now!r} "
+                f"— the shared clock would run backwards")
+
+    # ---------------- hook: dispatch-time validation ----------------
+    def after_dispatch(self, loop: Any) -> None:
+        now = loop.now
+        if now < self._last_t - EPS_T:
+            raise InvariantViolation(
+                f"clock: dispatch time went backwards "
+                f"({self._last_t!r} -> {now!r})")
+        # integrate the worst-case draw recorded after the previous event
+        # over the elapsed interval (caps only rise AT events, so the
+        # recorded post-event sum bounds the draw throughout the interval;
+        # in-flight cap lowers are counted at their old, higher value)
+        self._energy_int_j += (now - self._last_t) * self._power_sum_w
+        self._last_t = now
+        nodes = self._nodes()
+        self._check_power_hierarchy(nodes)
+        self._check_residency(nodes)
+        self._check_energy(nodes)
+        self._power_sum_w = sum(
+            max(c, e)
+            for nd in nodes for c, e in zip(nd.pm.commanded, nd.pm.effective))
+        self.checks += 1
+
+    # ---------------- invariant: hierarchical power ----------------
+    def _check_power_hierarchy(self, nodes: List[Any]) -> None:
+        total = 0.0
+        for nd in nodes:
+            pm = nd.pm
+            worst = pm._worst_case()
+            if worst > pm.budget + EPS_W:
+                raise InvariantViolation(
+                    f"power: node {nd.node_id} worst-case draw {worst:.3f} W "
+                    f"exceeds its budget {pm.budget:.3f} W")
+            if pm._budget_target > pm.budget + EPS_W:
+                raise InvariantViolation(
+                    f"power: node {nd.node_id} budget target "
+                    f"{pm._budget_target:.3f} W above budget "
+                    f"{pm.budget:.3f} W (shrink accounting corrupted)")
+            if pm.budget > pm.budget_ceil_w + EPS_W:
+                raise InvariantViolation(
+                    f"power: node {nd.node_id} budget {pm.budget:.3f} W "
+                    f"above its GPU-cap ceiling {pm.budget_ceil_w:.3f} W")
+            for g in range(pm.n):
+                for val, kind in ((pm.commanded[g], "commanded"),
+                                  (pm.effective[g], "effective")):
+                    if val < -EPS_W or val > pm.max_cap + EPS_W:
+                        raise InvariantViolation(
+                            f"power: node {nd.node_id} GPU {g} {kind} cap "
+                            f"{val:.3f} W outside [0, {pm.max_cap:.0f}] W")
+                if pm.powered and pm.commanded[g] < pm.min_cap - EPS_W:
+                    raise InvariantViolation(
+                        f"power: node {nd.node_id} GPU {g} commanded cap "
+                        f"{pm.commanded[g]:.3f} W below the spec floor "
+                        f"{pm.min_cap:.0f} W on a powered node")
+            total += pm.budget
+        if self.cluster is not None \
+                and total > self.cluster.facility_budget_w + EPS_W:
+            raise InvariantViolation(
+                f"power: node budgets sum to {total:.3f} W > facility "
+                f"budget {self.cluster.facility_budget_w:.3f} W "
+                f"(in-flight shrinks count at their old budgets)")
+
+    # ---------------- invariant: KV single-residency ----------------
+    def _check_residency(self, nodes: List[Any]) -> None:
+        seen: Dict[int, Tuple[Any, str]] = {}
+
+        def note(req: Any, where: str) -> None:
+            prev = seen.get(id(req))
+            if prev is not None:
+                raise InvariantViolation(
+                    f"residency: request rid={req.rid} lives in "
+                    f"{prev[1]} AND {where} — KV/queue state must be "
+                    f"single-resident")
+            seen[id(req)] = (req, where)
+
+        for nd in nodes:
+            if nd.defunct:
+                if not nd.is_empty():
+                    raise InvariantViolation(
+                        f"residency: defunct node {nd.node_id} still holds "
+                        f"request state")
+                continue
+            nid = nd.node_id
+            for req in nd.q_prefill:
+                note(req, f"node{nid}.q_prefill")
+            for req in nd.ring_wait:
+                note(req, f"node{nid}.ring_wait")
+            for req in nd._transfers:
+                note(req, f"node{nid}.ring_transfer")
+            for gpu in nd.gpus:
+                if gpu.inflight_prefill:
+                    for req in gpu.inflight_prefill:
+                        note(req, f"node{nid}.gpu{gpu.gid}.inflight_prefill")
+                for req, _done in gpu.mixed_prefill:
+                    note(req, f"node{nid}.gpu{gpu.gid}.mixed_prefill")
+                for req in gpu.active:
+                    note(req, f"node{nid}.gpu{gpu.gid}.active")
+                    self._check_decode_gpu(nd, gpu, req)
+                for req in gpu.pending_join:
+                    note(req, f"node{nid}.gpu{gpu.gid}.pending_join")
+                    self._check_decode_gpu(nd, gpu, req)
+
+    @staticmethod
+    def _check_decode_gpu(nd: Any, gpu: Any, req: Any) -> None:
+        if nd.coalesced or req.decode_gpu is None:
+            return
+        if req.decode_gpu != gpu.gid:
+            raise InvariantViolation(
+                f"residency: request rid={req.rid} sits in node "
+                f"{nd.node_id} GPU {gpu.gid}'s decode pool but claims "
+                f"decode_gpu={req.decode_gpu}")
+
+    # ---------------- invariant: energy conservation ----------------
+    def _records(self) -> List[Any]:
+        if self.cluster is not None:
+            return self.cluster.records
+        if self.node is not None:
+            return self.node.records
+        return []
+
+    def _check_energy(self, nodes: List[Any]) -> None:
+        total = 0.0
+        for rec in self._records():
+            e = rec.energy_j
+            if not (e >= 0.0) or e != e or e == float("inf"):
+                raise InvariantViolation(
+                    f"energy: request rid={rec.rid} carries non-finite or "
+                    f"negative energy_j={e!r}")
+            total += e
+        # prepay allowance: prefill batches are charged in full when the
+        # batch is kicked; bound each in-flight batch by max draw over the
+        # slowest (min-cap) duration
+        prepay = 0.0
+        for nd in nodes:
+            if nd.defunct:
+                continue
+            for gpu in nd.gpus:
+                if gpu.inflight_prefill:
+                    toks = sum(r.rec.input_tokens
+                               for r in gpu.inflight_prefill)
+                    dt = nd.cost.prefill_time(toks, nd.pm.min_cap)
+                    draw = nd.cost.power.draw("prefill", nd.pm.max_cap, True)
+                    prepay += draw * dt
+        bound = self._energy_int_j + prepay
+        if total > bound + 1e-6 + 1e-9 * bound:
+            raise InvariantViolation(
+                f"energy: charged per-request energy {total:.6f} J exceeds "
+                f"the integrated worst-case fleet power {bound:.6f} J "
+                f"(integral {self._energy_int_j:.6f} J + prefill prepay "
+                f"{prepay:.6f} J)")

@@ -2,3 +2,8 @@ from repro.configs.base import (
     ARCH_ALIASES, ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig,
     all_configs, get_config,
 )
+
+__all__ = [
+    "ARCH_ALIASES", "ARCH_IDS", "INPUT_SHAPES", "InputShape",
+    "ModelConfig", "all_configs", "get_config",
+]

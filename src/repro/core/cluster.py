@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
 from repro.configs.base import ModelConfig
 from repro.core.controller import (ControllerConfig, NodeStress, StaticPolicy)
 from repro.core.costmodel import MI300X, GPUSpec
@@ -119,7 +120,8 @@ class ClusterSimulator:
                  node_budgets: Optional[Sequence[float]] = None,
                  gpu_specs: Optional[Sequence[GPUSpec]] = None,
                  powers: Optional[Sequence[PowerModel]] = None,
-                 fidelity: str = "macro", router_policy: str = "capacity"):
+                 fidelity: str = "macro", router_policy: str = "capacity",
+                 sanitize: Optional[bool] = None):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
         resolves from the node's spec). When ``node_budgets`` is omitted,
@@ -128,8 +130,14 @@ class ClusterSimulator:
         cluster without hand-built per-node budgets. ``fidelity``:
         forwarded to every node — ``"macro"`` (default, event-coalesced
         decode) or ``"iter"`` (one event per decode iteration; the
-        golden-equivalence path). ``router_policy``: see PowerAwareRouter."""
+        golden-equivalence path). ``router_policy``: see PowerAwareRouter.
+        ``sanitize``: validate core invariants at every dispatch
+        (default: the ``RAPID_SANITIZE`` environment variable)."""
         self.loop = EventLoop()
+        if sanitize_enabled(sanitize):
+            san = InvariantSanitizer()
+            san.attach_cluster(self)
+            self.loop.sanitizer = san
         pols = list(policies) if policies else [policy] * n_nodes
         specs = list(gpu_specs) if gpu_specs else [gpu] * n_nodes
         assert len(specs) == n_nodes
@@ -148,7 +156,7 @@ class ClusterSimulator:
             NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
                           gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
                           coalesced=coalesced, seed=seed + i, loop=self.loop,
-                          node_id=i, fidelity=fidelity)
+                          node_id=i, fidelity=fidelity, sanitize=sanitize)
             for i in range(n_nodes)
         ]
         self.fidelity = fidelity
@@ -174,7 +182,7 @@ class ClusterSimulator:
         return [nd for nd, a in zip(self.nodes, self.active) if a]
 
     # ---------------- invariants ----------------
-    def assert_facility_invariant(self):
+    def assert_facility_invariant(self) -> None:
         """Worst-case facility accounting: in-flight budget shrinks count at
         the old (higher) budget, so this must hold at every instant.
         Powered-off nodes hold zero budget, so summing every node covers
@@ -188,7 +196,7 @@ class ClusterSimulator:
         return total
 
     # ---------------- event handling ----------------
-    def sync_all(self):
+    def sync_all(self) -> None:
         """Bring every live node's macro-stepped iterations and power
         manager up to date (cross-node readers must not see stale state).
         Shared by cluster events and the fleet manager's churn/migration
@@ -198,7 +206,7 @@ class ClusterSimulator:
                 if not nd.defunct:
                     nd.sync()
 
-    def validate_all(self):
+    def validate_all(self) -> None:
         """Post-event plan revalidation on every live node (cap changes this
         event made truncate running plans at the in-flight boundary)."""
         if self.fidelity == "macro":

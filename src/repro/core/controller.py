@@ -16,7 +16,7 @@ observation that decode does not scale beyond it, Fig 9a).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 from repro.core.power_manager import PowerManager
 

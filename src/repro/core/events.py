@@ -10,6 +10,12 @@ Events at equal timestamps dispatch in push order (a monotonically
 increasing sequence number breaks ties), which preserves the single-node
 simulator's behaviour exactly when it owns a private loop.
 
+Sanitizer mode: the loop optionally carries an ``InvariantSanitizer``
+(``repro.analysis.check.sanitize``) which vets every ``push`` for
+causality (no events in the past) and re-validates the registered
+simulators' invariants after every dispatch. With ``sanitizer=None``
+(the default) the residue is one ``is not None`` test per push/step.
+
 The loop also carries a synchronous publish/subscribe channel: a node can
 announce a state change (e.g. a role-flip drain starting or completing)
 without knowing whether a cluster coordinator is listening. Subscribers run
@@ -20,7 +26,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 
 class EventLoop:
@@ -28,24 +34,27 @@ class EventLoop:
     # report how many events a figure cost (``benchmarks.common.Timer``)
     dispatched_total: int = 0
 
-    def __init__(self):
+    def __init__(self, sanitizer: Optional[object] = None):
         self.heap: List[tuple] = []
         self._seq = itertools.count()
         self.now = 0.0
         self.dispatched = 0            # events dispatched by *this* loop
         self._subs: Dict[str, List[Callable]] = {}
         self._cancelled: set = set()   # seq tokens of revoked events
+        self.sanitizer = sanitizer     # InvariantSanitizer | None
 
     def subscribe(self, topic: str, fn: Callable[[object], None]) -> None:
         self._subs.setdefault(topic, []).append(fn)
 
-    def publish(self, topic: str, payload=None) -> None:
+    def publish(self, topic: str, payload: Any = None) -> None:
         for fn in self._subs.get(topic, []):
             fn(payload)
 
     def push(self, t: float, handler: Callable[[str, object], None],
-             kind: str, payload=None) -> int:
+             kind: str, payload: Any = None) -> int:
         """Schedule an event; returns a token accepted by ``cancel``."""
+        if self.sanitizer is not None:
+            self.sanitizer.check_push(self.now, t, kind)
         seq = next(self._seq)
         heapq.heappush(self.heap, (t, seq, kind, handler, payload))
         return seq
@@ -73,6 +82,8 @@ class EventLoop:
         self.dispatched += 1
         EventLoop.dispatched_total += 1
         handler(kind, payload)
+        if self.sanitizer is not None:
+            self.sanitizer.after_dispatch(self)
         return t
 
     def run(self, until: Callable[[], bool], horizon_s: float = 1e5) -> None:

@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
 from repro.core.cluster import ClusterSimulator
 from repro.core.simulator import NodeSimulator, SimRequest
 
@@ -82,12 +83,21 @@ class FleetManager:
 
     def __init__(self, cluster: ClusterSimulator,
                  cfg: Optional[FleetConfig] = None,
-                 standby: Sequence[int] = ()):
+                 standby: Sequence[int] = (),
+                 sanitize: Optional[bool] = None):
         for nd in cluster.nodes:
             assert not nd.coalesced, "fleet churn needs disaggregated nodes"
         self.cs = cluster
         self.loop = cluster.loop
         self.cfg = cfg or FleetConfig()
+        if self.loop.sanitizer is None and sanitize_enabled(sanitize):
+            # the cluster was built without sanitize; honour an explicit
+            # fleet-level request by installing one now
+            san = InvariantSanitizer()
+            san.attach_cluster(cluster)
+            self.loop.sanitizer = san
+        if self.loop.sanitizer is not None:
+            self.loop.sanitizer.attach_fleet(self)
         # nameplate budgets: what each node held at construction — the
         # static arm re-powers a returning node at its nameplate (nobody
         # re-leveled anything while it was away)
@@ -106,14 +116,18 @@ class FleetManager:
             cluster.nodes[nid].power_samples.append((0.0, 0.0))
 
     # ---------------- schedule API ----------------
+    # Callers pass wall-plan times that may already have passed once the
+    # sim is running (e.g. scripting churn mid-run); clamp to ``now`` so a
+    # stale plan degrades to "immediately" instead of violating causality
+    # on the shared clock (simcheck RC004).
     def schedule_join(self, t: float, node_id: int) -> None:
-        self.loop.push(t, self._handle, "join", node_id)
+        self.loop.push(max(t, self.loop.now), self._handle, "join", node_id)
 
     def schedule_leave(self, t: float, node_id: int) -> None:
-        self.loop.push(t, self._handle, "leave", node_id)
+        self.loop.push(max(t, self.loop.now), self._handle, "leave", node_id)
 
     def schedule_fail(self, t: float, node_id: int) -> None:
-        self.loop.push(t, self._handle, "fail", node_id)
+        self.loop.push(max(t, self.loop.now), self._handle, "fail", node_id)
 
     # ---------------- event plumbing ----------------
     def _handle(self, kind: str, payload=None):

@@ -12,7 +12,9 @@ as long as the budget accounting uses commanded caps for raises and
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional, Tuple
+
+from repro.analysis.check.sanitize import InvariantViolation, sanitize_enabled
 
 MIN_CAP_W = 400.0
 MAX_CAP_W = 750.0
@@ -53,8 +55,12 @@ class PowerManager:
     def __init__(self, n_gpus: int, node_budget_w: float,
                  backend: Optional[PowerBackend] = None,
                  min_cap: float = MIN_CAP_W, max_cap: float = MAX_CAP_W,
-                 initial_caps: Optional[List[float]] = None):
+                 initial_caps: Optional[List[float]] = None,
+                 sanitize: Optional[bool] = None):
         self.n = n_gpus
+        # sanitizer mode: self-check the budget invariant after every
+        # mutator, not only at the dispatch boundary (RAPID_SANITIZE=1)
+        self.sanitize = sanitize_enabled(sanitize)
         self.budget = node_budget_w
         self._budget_target = node_budget_w   # < budget while a shrink is in flight
         self.backend = backend or SimulatedSMI()
@@ -78,6 +84,25 @@ class PowerManager:
         self.version_total = 0
 
     # -- bookkeeping -----------------------------------------------------------
+    def _sanity(self, where: str) -> None:
+        """Sanitizer-mode self-check: every mutator leaves the worst-case
+        draw within budget and every cap inside the spec envelope."""
+        if self._worst_case() > self.budget + 1e-6:
+            raise InvariantViolation(
+                f"PowerManager.{where}: worst-case draw "
+                f"{self._worst_case():.3f} W exceeds budget "
+                f"{self.budget:.3f} W")
+        if self._budget_target > self.budget + 1e-6:
+            raise InvariantViolation(
+                f"PowerManager.{where}: budget target "
+                f"{self._budget_target:.3f} W above budget {self.budget:.3f} W")
+        for g in range(self.n):
+            for val in (self.commanded[g], self.effective[g]):
+                if val < -1e-6 or val > self.max_cap + 1e-6:
+                    raise InvariantViolation(
+                        f"PowerManager.{where}: GPU {g} cap {val:.3f} W "
+                        f"outside [0, {self.max_cap:.0f}] W")
+
     def _worst_case(self) -> float:
         """Budget-relevant power: for lowering commands still in flight the
         GPU may still draw its old (higher) cap."""
@@ -102,7 +127,7 @@ class PowerManager:
         """A budget shrink has been issued but not yet committed."""
         return abs(self._budget_target - self.budget) > 1e-9
 
-    def tick(self, now: float):
+    def tick(self, now: float) -> None:
         """Apply pending cap changes that have become effective."""
         if not self.pending:           # hot path: called on every sim event
             return
@@ -115,6 +140,8 @@ class PowerManager:
             else:
                 still.append(ch)
         self.pending = still
+        if self.sanitize:
+            self._sanity("tick")
 
     def caps(self) -> List[float]:
         return list(self.effective)
@@ -140,6 +167,8 @@ class PowerManager:
             self.cap_version[gpu] += 1
             self.version_total += 1
             self.history.append((now, gpu, watts))
+            if self.sanitize:
+                self._sanity("set_cap")
             return now
         ch = self.backend.set_cap(now, gpu, watts)
         self.commanded[gpu] = watts
@@ -147,10 +176,12 @@ class PowerManager:
         self.cap_version[gpu] += 1
         self.version_total += 1
         self.history.append((now, gpu, watts))
+        if self.sanitize:
+            self._sanity("set_cap")
         return ch.effective_at
 
     def shift(self, now: float, src: List[int], dst: List[int],
-              watts_per_gpu: float):
+              watts_per_gpu: float) -> Tuple[float, float]:
         """Move watts from each src GPU to dst GPUs (source-before-sink).
         Lowers the sources now; returns (t_ready, freed_watts). The caller
         schedules ``apply_raise(t_ready, dst, freed_watts, dst_max)`` —
@@ -168,7 +199,7 @@ class PowerManager:
         return t_ready, total
 
     def apply_raise(self, now: float, dst: List[int], total: float,
-                    dst_max: Optional[float] = None):
+                    dst_max: Optional[float] = None) -> None:
         """Second phase of ``shift``: distribute the freed watts to sinks."""
         if not dst or total <= 0:
             return
@@ -180,7 +211,9 @@ class PowerManager:
             if target > self.commanded[g]:
                 self.set_cap(now, g, target)
 
-    def distribute_uniform(self, now: float, gpus: Optional[List[int]] = None):
+    def distribute_uniform(self, now: float,
+                           gpus: Optional[List[int]] = None
+                           ) -> Tuple[float, List[int], float]:
         """Paper Algorithm 1 line 14: DISTRIBUTEUNIFORMPOWER(AllGPUs).
         Lower-first then raise; returns (t_ready, gpus, per)."""
         gpus = list(range(self.n)) if gpus is None else gpus
@@ -191,14 +224,16 @@ class PowerManager:
                 t_ready = max(t_ready, self.set_cap(now, g, per))
         return t_ready, gpus, per
 
-    def apply_uniform(self, now: float, gpus: List[int], per: float):
+    def apply_uniform(self, now: float, gpus: List[int],
+                      per: float) -> None:
         self.tick(now)
         for g in gpus:
             if self.commanded[g] < per:
                 self.set_cap(now, g, per)
 
     # -- hierarchical budgets (cluster -> node) --------------------------------
-    def shrink_budget(self, now: float, delta_w: float):
+    def shrink_budget(self, now: float,
+                      delta_w: float) -> Tuple[float, float]:
         """First phase of a cluster-level budget move out of this node:
         lower GPU caps (highest first) until the commanded total fits the
         shrunk budget, but keep ``self.budget`` — the facility-accounting
@@ -234,15 +269,19 @@ class PowerManager:
             for g in order[:chosen_k]:
                 if self.commanded[g] > level + 1e-9:
                     t_ready = max(t_ready, self.set_cap(now, g, level))
+        if self.sanitize:
+            self._sanity("shrink_budget")
         return t_ready, freed
 
-    def commit_budget(self, now: float):
+    def commit_budget(self, now: float) -> None:
         """Second phase: the lowered caps are in force; release the watts."""
         self.tick(now)
         self.budget = self._budget_target
         self.budget_history.append((now, self.budget))
         assert self._worst_case() <= self.budget + 1e-6, \
             (self._worst_case(), self.budget)
+        if self.sanitize:
+            self._sanity("commit_budget")
 
     def grow_budget(self, now: float, delta_w: float) -> float:
         """Raise this node's budget immediately (safe: more budget cannot
@@ -270,6 +309,8 @@ class PowerManager:
             if give > 1e-9:
                 self.set_cap(now, g, self.commanded[g] + give)
                 left -= give
+        if self.sanitize:
+            self._sanity("grow_budget")
         return absorbed
 
     # -- fleet membership (node power on/off) ----------------------------------
@@ -293,6 +334,8 @@ class PowerManager:
             self.cap_version[g] += 1
         self.version_total += self.n
         self.budget_history.append((now, 0.0))
+        if self.sanitize:
+            self._sanity("power_off")
         return released
 
     def power_on(self, now: float, budget_w: float) -> float:
@@ -316,6 +359,8 @@ class PowerManager:
         self.version_total += self.n
         self.budget_history.append((now, budget))
         self.history.append((now, -1, per))     # -1: whole-node uniform set
+        if self.sanitize:
+            self._sanity("power_on")
         return budget
 
     def at_limits(self, src: List[int], dst: List[int],

@@ -40,14 +40,14 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
 from repro.configs.base import ModelConfig
-from repro.core.controller import (ControllerConfig, Decision, NodeStress,
-                                   Observation, RapidController, StaticPolicy,
-                                   stress_from)
+from repro.core.controller import (ControllerConfig, NodeStress, Observation,
+                                   RapidController, StaticPolicy, stress_from)
 from repro.core.costmodel import MI300X, CostModel, GPUSpec
 from repro.core.events import EventLoop
 from repro.core.goodput import GoodputSummary, RequestRecord, summarize
@@ -104,7 +104,7 @@ class MetricWindow:
         self.vs[n] = v
         self.n = n + 1
 
-    def extend(self, ts, vs) -> None:
+    def extend(self, ts: np.ndarray, vs: np.ndarray) -> None:
         n, k = self.n, len(ts)
         if n + k > len(self.ts):
             self._grow(n + k)
@@ -213,7 +213,7 @@ class SimRequest:                    # by object in the in-flight tables
     e_mark: float = 0.0
 
     @property
-    def rid(self):
+    def rid(self) -> int:
         return self.rec.rid
 
 
@@ -229,7 +229,8 @@ class MacroPlan:
 
     __slots__ = ("gen", "end_times", "dts", "e_ends", "capv", "m")
 
-    def __init__(self, gen, end_times, dts, e_ends, capv):
+    def __init__(self, gen: int, end_times: np.ndarray, dts: np.ndarray,
+                 e_ends: np.ndarray, capv: int) -> None:
         self.gen = gen             # matches GPU.gen; stale events ignored
         self.end_times = end_times
         self.dts = dts
@@ -277,19 +278,21 @@ class GPU:
 class Workload:
     """List of requests with arrival times."""
 
-    def __init__(self, entries, name=""):
+    def __init__(self, entries: List[tuple], name: str = "") -> None:
         # entries: (arrival, in_tokens, out_tokens, ttft_slo, tpot_slo)
         self.entries = sorted(entries, key=lambda e: e[0])
         self.name = name
 
     @staticmethod
-    def poisson_arrivals(n: int, qps: float, rng) -> np.ndarray:
+    def poisson_arrivals(n: int, qps: float,
+                         rng: np.random.Generator) -> np.ndarray:
         gaps = rng.exponential(1.0 / qps, n)
         return np.cumsum(gaps)
 
     @classmethod
-    def longbench_like(cls, n: int, qps: float, seed=0, max_input=8192,
-                       ttft_slo=1.0, tpot_slo=0.040):
+    def longbench_like(cls, n: int, qps: float, seed: int = 0,
+                       max_input: int = 8192, ttft_slo: float = 1.0,
+                       tpot_slo: float = 0.040) -> "Workload":
         """Long-tailed input lengths up to 8k (paper Section 4)."""
         rng = np.random.default_rng(seed)
         t = cls.poisson_arrivals(n, qps, rng)
@@ -300,8 +303,10 @@ class Workload:
                      tpot_slo) for i in range(n)], name="longbench")
 
     @classmethod
-    def sonnet_phases(cls, qps: float, seed=0, n1=1000, n2=1000,
-                      ttft_slo=1.0, tpot1=0.040, tpot2=0.020):
+    def sonnet_phases(cls, qps: float, seed: int = 0, n1: int = 1000,
+                      n2: int = 1000, ttft_slo: float = 1.0,
+                      tpot1: float = 0.040,
+                      tpot2: float = 0.020) -> "Workload":
         """Paper Section 5.2: prefill-heavy phase (8k in / 128 out, 40 ms)
         then decode-heavy phase (500 in / 500 out, 20 ms)."""
         rng = np.random.default_rng(seed)
@@ -313,14 +318,16 @@ class Workload:
 
     @classmethod
     def uniform(cls, n: int, qps: float, in_tokens: int, out_tokens: int,
-                seed=0, ttft_slo=1.0, tpot_slo=0.040):
+                seed: int = 0, ttft_slo: float = 1.0,
+                tpot_slo: float = 0.040) -> "Workload":
         rng = np.random.default_rng(seed)
         t = cls.poisson_arrivals(n, qps, rng)
         return cls([(float(tt), in_tokens, out_tokens, ttft_slo, tpot_slo)
                     for tt in t], name="uniform")
 
     @classmethod
-    def phased_mix(cls, workloads: List["Workload"], name="mix"):
+    def phased_mix(cls, workloads: List["Workload"],
+                   name: str = "mix") -> "Workload":
         """Concatenate workloads end-to-end in arrival time (each phase's
         arrivals are offset by the previous phase's last arrival) — the
         fleet-scale scenario's mixed longbench/sonnet arrival phases."""
@@ -347,7 +354,7 @@ class NodeSimulator:
                  min_cap_w: Optional[float] = None,
                  max_cap_w: Optional[float] = None,
                  loop: Optional[EventLoop] = None, node_id: int = 0,
-                 fidelity: str = "macro"):
+                 fidelity: str = "macro", sanitize: Optional[bool] = None):
         assert fidelity in ("macro", "iter"), fidelity
         self.fidelity = fidelity
         self._macro = fidelity == "macro"
@@ -364,7 +371,7 @@ class NodeSimulator:
         caps = [min(max(c, lo), hi) for c in policy.caps()]
         assert sum(caps) <= node_budget_w + 1e-6, (caps, node_budget_w)
         self.pm = PowerManager(self.n_gpus, node_budget_w, initial_caps=caps,
-                               min_cap=lo, max_cap=hi)
+                               min_cap=lo, max_cap=hi, sanitize=sanitize)
         self.coalesced = coalesced
         if coalesced:
             self.gpus = [GPU(i, "mixed") for i in range(self.n_gpus)]
@@ -376,7 +383,17 @@ class NodeSimulator:
         self.ctrl_cfg = ctrl_cfg
         self.rng = np.random.default_rng(seed)
 
-        self.loop = loop or EventLoop()
+        if loop is not None:
+            # shared clock: the cluster layer owns the loop (and any
+            # sanitizer attached to it); a per-node flag would fragment
+            # the facility-level invariant checks
+            self.loop = loop
+        else:
+            self.loop = EventLoop()
+            if sanitize_enabled(sanitize):
+                san = InvariantSanitizer()
+                san.attach_node(self)
+                self.loop.sanitizer = san
         self.q_prefill: deque = deque()
         self.q_prefill_tokens = 0               # incremental token sum
         self.ring_free = RING_SLOTS
@@ -510,7 +527,8 @@ class NodeSimulator:
             return
         dgpus = self.decode_gpus() or [g.gid for g in self.gpus
                                        if g.role == "decode"]
-        load = lambda i: len(self.gpus[i].active) + len(self.gpus[i].pending_join)
+        def load(i: int) -> int:
+            return len(self.gpus[i].active) + len(self.gpus[i].pending_join)
         cap = self.cost.max_decode_batch(int(self._global_avg_ctx()))
         if not dgpus or min((load(i) for i in dgpus), default=cap) >= cap:
             # decode pool saturated: request stays in its ring slot
@@ -735,7 +753,7 @@ class NodeSimulator:
         p.m = upto
         return ends[upto - 1]
 
-    def sync_power(self):
+    def sync_power(self) -> None:
         """Router-read fidelity on cluster arrivals: the per-iteration path
         applies pending cap changes at every decode-iteration event, so a
         cross-node read between an enforcement instant and the next real
@@ -747,7 +765,7 @@ class NodeSimulator:
         if self.pm.pending:
             self.sync()
 
-    def sync(self):
+    def sync(self) -> None:
         """Materialize all macro iterations that completed strictly before
         the current event's timestamp, then bring the power manager up to
         the last materialized instant (the per-iteration path would have
@@ -1089,7 +1107,7 @@ class NodeSimulator:
             self._truncate_plan(gpu, self.now)
         return out
 
-    def evict_for_leave(self):
+    def evict_for_leave(self) -> None:
         """Graceful-leave eviction: everything movable right now. Returns
         ``(no_kv, with_kv)`` — queued prefill work (re-routes for free, its
         prompt was never processed) and KV-holding work (ring waiters +
@@ -1153,8 +1171,8 @@ class NodeSimulator:
         dgpus = self.decode_gpus()
         if not dgpus:
             return False
-        load = lambda i: (len(self.gpus[i].active)
-                          + len(self.gpus[i].pending_join))
+        def load(i: int) -> int:
+            return len(self.gpus[i].active) + len(self.gpus[i].pending_join)
         gid = min(dgpus, key=load)
         if load(gid) >= self.cost.max_decode_batch(
                 int(self._global_avg_ctx())):
@@ -1256,8 +1274,8 @@ class NodeSimulator:
         e_p = power.joules("prefill", cap_p, t_p)
         # marginal decode: joining the least-loaded decode GPU grows its
         # batch by one; the request pays a 1/b share of each iteration
-        load = lambda i: (len(self.gpus[i].active)
-                          + len(self.gpus[i].pending_join))
+        def load(i: int) -> int:
+            return len(self.gpus[i].active) + len(self.gpus[i].pending_join)
         gid = min(dec, key=load)
         b = load(gid) + 1
         cap_d = self.pm.effective[gid]
@@ -1289,7 +1307,7 @@ class NodeSimulator:
                            node_id=self.node_id)
 
     # ---------------- main loop ----------------
-    def submit(self, req: SimRequest):
+    def submit(self, req: SimRequest) -> None:
         """Accept a request at the current time (called from the arrival
         event in single-node mode, or by the cluster router)."""
         assert not self.defunct and not self.leaving, \
@@ -1306,7 +1324,7 @@ class NodeSimulator:
             for gid in self.prefill_gpus():
                 self._kick_prefill(self.gpus[gid])
 
-    def start(self):
+    def start(self) -> None:
         """Schedule the periodic control/sampling tick."""
         self._push(self.loop.now, "ctrl")
 
@@ -1321,7 +1339,7 @@ class NodeSimulator:
     # force-materializes its own plan inside the handler.
     _SYNC_KINDS = frozenset(("transfer_done", "ctrl", "drain_done"))
 
-    def handle(self, kind: str, payload=None):
+    def handle(self, kind: str, payload: Any = None) -> None:
         """Event sink: all node events dispatch through here. Macro fidelity
         first materializes any iterations that completed before this event
         (``sync``) when the handler can read iteration-dependent state, and

@@ -1,4 +1,7 @@
+# ruff: noqa: E402 -- the XLA device-count env var MUST be set before
+# anything imports jax; import order here is load-bearing
 import os
+
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                            " --xla_force_host_platform_device_count=512").strip()
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) on
@@ -17,7 +20,7 @@ import json
 import time
 import traceback
 
-import jax
+import jax  # noqa: F401 -- locks the 512-device host platform now
 
 from repro.analysis import hlo as H
 from repro.analysis import hlo_graph as HG

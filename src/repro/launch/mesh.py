@@ -48,7 +48,8 @@ def split_disagg_mesh(mesh, n_prefill: int):
     devs = np.asarray(mesh.devices)            # (data, model) or (pod, data, model)
     axis = list(mesh.axis_names).index("data")
     assert 0 < n_prefill < devs.shape[axis]
-    take = lambda sl: np.take(devs, sl, axis=axis)
+    def take(sl):
+        return np.take(devs, sl, axis=axis)
     pre = jax.sharding.Mesh(take(range(n_prefill)), mesh.axis_names)
     dec = jax.sharding.Mesh(take(range(n_prefill, devs.shape[axis])),
                             mesh.axis_names)

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import rglru, transformer, whisper, xlstm
-from repro.models.sharding import constrain
 
 _FAMILY_MODULES = {
     "dense": transformer,

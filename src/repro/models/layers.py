@@ -203,7 +203,8 @@ def dist_decode_attention(q, k_cache, v_cache, k_new, v_new, pos):
         out = o.reshape(-1, 1, Hq, hd).astype(qb.dtype)
         return out, kc, vc
 
-    bspec = lambda *rest: P(batch_ax, *rest)
+    def bspec(*rest):
+        return P(batch_ax, *rest)
     out, kc, vc = _shard_map(
         body, mesh=mesh,
         in_specs=(bspec(None, None, None), bspec(seq_ax, None, None),

@@ -10,7 +10,6 @@ family runs ``long_500k`` natively.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax
@@ -178,7 +177,8 @@ def _slot_cache(cfg, kind, batch, max_len, dtype, window):
     if kind == "rec":
         return _rec_state(cfg, batch, dtype)
     Sc = min(max_len, window or cfg.window or max_len)
-    z = lambda: jnp.zeros((batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
+    def z():
+        return jnp.zeros((batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
     return {"k": z(), "v": z()}
 
 
@@ -208,7 +208,8 @@ def init_params(cfg, key, dtype=jnp.bfloat16):
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                window: Optional[int] = None):
     G, pat, rest = _plan(cfg)
-    stack = lambda c: jax.tree.map(lambda a: jnp.broadcast_to(a, (G, *a.shape)), c)
+    def stack(c):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (G, *a.shape)), c)
     return {
         "slots": tuple(stack(_slot_cache(cfg, k, batch, max_len, dtype, window))
                        for k in pat),

@@ -66,7 +66,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                window: Optional[int] = None):
     G = _n_groups(cfg)
     Sc = min(max_len, window) if window else max_len
-    kv = lambda: jnp.zeros((G, batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
+    def kv():
+        return jnp.zeros((G, batch, Sc, cfg.n_kv_heads, cfg.head_dim), dtype)
     return {
         "slots": tuple({"k": kv(), "v": kv()} for _ in _slot_kinds(cfg)),
         "pos": jnp.zeros((), jnp.int32),

@@ -60,7 +60,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                window: Optional[int] = None):
     Ld = cfg.n_layers
     Sc = min(max_len, window) if window else max_len
-    kv = lambda s: jnp.zeros((Ld, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
+    def kv(s):
+        return jnp.zeros((Ld, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype)
     return {
         "k": kv(Sc), "v": kv(Sc),
         "ck": kv(cfg.encoder_seq), "cv": kv(cfg.encoder_seq),

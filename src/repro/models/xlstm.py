@@ -88,13 +88,14 @@ def _mlstm_chunk_scan(q, k, v, log_i, log_f, state):
     nc = -(-S // CHUNK)
     pad = nc * CHUNK - S
     if pad:
-        padfn = lambda a, fill=0.0: jnp.pad(a, [(0, 0), (0, pad)] +
-                                            [(0, 0)] * (a.ndim - 2),
-                                            constant_values=fill)
+        def padfn(a, fill=0.0):
+            return jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                           constant_values=fill)
         q, k, v = padfn(q), padfn(k), padfn(v)
         log_i = padfn(log_i, _NEG)   # padded steps inject nothing
         log_f = padfn(log_f, 0.0)    # ... and do not decay the state
-    ch = lambda a: a.reshape(B, nc, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+    def ch(a):
+        return a.reshape(B, nc, CHUNK, *a.shape[2:]).swapaxes(0, 1)
     qc, kc, vc, lic, lfc = map(ch, (q, k, v, log_i, log_f))  # (nc,B,C,...)
 
     def chunk_body(carry, xs):
@@ -238,7 +239,8 @@ def _slstm_block(p, x, cfg, state, mode):
 
 def _slstm_state(cfg, batch, dtype):
     D = cfg.d_model
-    z = lambda: jnp.zeros((batch, D), jnp.float32)
+    def z():
+        return jnp.zeros((batch, D), jnp.float32)
     return (z(), z(), jnp.full((batch, D), _NEG, jnp.float32), z())
 
 
@@ -267,8 +269,8 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                window: Optional[int] = None):
     G = _n_groups(cfg)
     kinds = _slot_kinds(cfg)
-    stack = lambda mk: jax.tree.map(
-        lambda a: jnp.broadcast_to(a, (G, *a.shape)), mk)
+    def stack(mk):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (G, *a.shape)), mk)
     slots = tuple(stack(_mlstm_state(cfg, batch, dtype) if k == "mlstm"
                         else _slstm_state(cfg, batch, dtype)) for k in kinds)
     return {"slots": slots, "pos": jnp.zeros((), jnp.int32)}

@@ -36,7 +36,8 @@ def lr_schedule(cfg: AdamWConfig) -> Callable:
 
 
 def init_state(cfg: AdamWConfig, params):
-    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, cfg.state_dtype)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

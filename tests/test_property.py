@@ -4,14 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
-
 from repro.core.power_manager import PowerManager
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 from repro.serving.ring import KVRing
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 
 # ---------------------------------------------------------------------------
@@ -151,3 +151,49 @@ def test_decode_time_monotone_in_batch_and_ctx(batch, ctx):
     # throughput (tokens/s) must not decrease with batch
     assert (batch + 1) / cm.decode_step_time(batch + 1, ctx, 600) >= \
         batch / t - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: hierarchical power conservation holds under random node churn
+# and controller role flips (the runtime half of simcheck — the
+# InvariantSanitizer validates every dispatch and raises on violation)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["fail", "leave", "join"]),
+                          st.floats(0.5, 25.0)),
+                min_size=1, max_size=3),
+       st.integers(0, 999))
+def test_churn_roleflip_power_conservation(events, seed):
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.cluster import ClusterConfig, ClusterSimulator
+    from repro.core.controller import ControllerConfig, policy_4p4d
+    from repro.core.fleet import FleetConfig, FleetManager
+    from repro.core.simulator import Workload
+
+    ctrl = dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=True, ttft_slo=2.0)
+    cs = ClusterSimulator(get_config("llama31_8b"), policy_4p4d(500), 3,
+                          node_budget_w=4000.0, ctrl_cfg=ctrl,
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          sanitize=True)
+    fm = FleetManager(cs, FleetConfig(elastic=True))
+    gone = set()
+    for i, (kind, t) in enumerate(sorted(events, key=lambda e: e[1])):
+        nid = i % 3
+        if kind == "join":
+            if nid in gone:                 # rejoin a departed node
+                fm.schedule_join(t, nid)
+                gone.discard(nid)
+        elif nid not in gone and len(gone) < 2:   # keep >= 1 node alive
+            (fm.schedule_fail if kind == "fail" else fm.schedule_leave)(t, nid)
+            gone.add(nid)
+    wl = Workload.uniform(30, qps=4.0, in_tokens=2048, out_tokens=64,
+                          seed=seed)
+    # every dispatch is validated: a conservation / causality / residency /
+    # energy break anywhere in the churn+role-flip machinery raises here
+    cs.run(wl)
+    assert cs.loop.sanitizer.checks > 0
+    cs.assert_facility_invariant()

@@ -4,12 +4,12 @@ import dataclasses
 
 import pytest
 
+from repro.configs import get_config
 from repro.core.controller import (ControllerConfig, Observation,
                                    RapidController, policy_nonuniform)
 from repro.core.costmodel import MI300X, CostModel
 from repro.core.power_manager import PowerManager, SimulatedSMI
 from repro.core.power_model import mi300x
-from repro.configs import get_config
 
 
 # -- power model calibration (paper Fig 4) ----------------------------------

@@ -1,0 +1,154 @@
+"""Runtime invariant sanitizer (RAPID_SANITIZE): mutation tests that seed
+each violation class and prove the sanitizer catches it at the next
+dispatch, switch-resolution semantics, zero-residue-when-off, and
+bit-identity of results with the sanitizer enabled."""
+import dataclasses
+
+import pytest
+
+from repro.analysis.check.sanitize import (InvariantSanitizer,
+                                           InvariantViolation,
+                                           sanitize_enabled)
+from repro.configs import get_config
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.events import EventLoop
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.goodput import RequestRecord
+from repro.core.simulator import SimRequest, Workload
+
+CFG = get_config("llama31_8b")
+
+
+def make_cluster(n_nodes=2, **kw):
+    ctrl = dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=False, ttft_slo=2.0)
+    return ClusterSimulator(CFG, policy_4p4d(500), n_nodes,
+                            node_budget_w=4000.0, ctrl_cfg=ctrl,
+                            cluster_cfg=ClusterConfig(allow_shift=True),
+                            **kw)
+
+
+def noop(kind, payload):
+    pass
+
+
+def dispatch_once(cs):
+    """Force one dispatch so the sanitizer validates the mutated state."""
+    cs.loop.push(cs.loop.now, noop, "sanity-probe")
+    cs.loop.step()
+
+
+# ---------------------------------------------------------------------------
+# switch resolution + zero residue when off
+# ---------------------------------------------------------------------------
+
+def test_switch_resolution(monkeypatch):
+    monkeypatch.delenv("RAPID_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    assert sanitize_enabled(True)
+    for v in ("1", "true", "YES", "on"):
+        monkeypatch.setenv("RAPID_SANITIZE", v)
+        assert sanitize_enabled()
+    monkeypatch.setenv("RAPID_SANITIZE", "0")
+    assert not sanitize_enabled()
+    monkeypatch.setenv("RAPID_SANITIZE", "1")
+    assert not sanitize_enabled(False)      # explicit argument beats env
+
+
+def test_off_by_default_leaves_no_hook(monkeypatch):
+    monkeypatch.delenv("RAPID_SANITIZE", raising=False)
+    assert EventLoop().sanitizer is None
+    assert make_cluster().loop.sanitizer is None
+
+
+def test_env_var_threads_through_cluster(monkeypatch):
+    monkeypatch.setenv("RAPID_SANITIZE", "1")
+    cs = make_cluster()
+    assert isinstance(cs.loop.sanitizer, InvariantSanitizer)
+    assert cs.loop.sanitizer.cluster is cs
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: each seeded violation is caught
+# ---------------------------------------------------------------------------
+
+def test_budget_written_around_api_is_caught():
+    cs = make_cluster(sanitize=True)
+    assert cs.loop.sanitizer is not None
+    # bypass shrink_budget/commit_budget (exactly what RC001 forbids in
+    # source): caps still command 8 x 500 W against a 1000 W budget
+    cs.nodes[0].pm.budget = 1000.0
+    with pytest.raises(InvariantViolation, match="worst-case draw"):
+        dispatch_once(cs)
+
+
+def test_budget_inflation_breaks_facility_sum():
+    cs = make_cluster(sanitize=True)
+    # fits under the node's own GPU-cap ceiling, but the per-node budgets
+    # now sum past the facility budget
+    cs.nodes[0].pm.budget = 4500.0
+    with pytest.raises(InvariantViolation, match="facility"):
+        dispatch_once(cs)
+
+
+def test_cap_written_around_api_is_caught():
+    cs = make_cluster(sanitize=True)
+    cs.nodes[0].pm.commanded[0] = 100.0     # below the 400 W spec floor
+    with pytest.raises(InvariantViolation, match="spec floor"):
+        dispatch_once(cs)
+
+
+def test_event_posted_in_past_is_caught():
+    cs = make_cluster(sanitize=True)
+    cs.run(Workload.uniform(5, qps=4.0, in_tokens=512, out_tokens=8, seed=3))
+    assert cs.loop.now > 1.0
+    with pytest.raises(InvariantViolation, match="causality"):
+        cs.loop.push(cs.loop.now - 1.0, noop, "stale")
+
+
+def test_double_resident_request_is_caught():
+    cs = make_cluster(sanitize=True)
+    req = SimRequest(RequestRecord(1, 0.0, 2048, 16))
+    cs.nodes[0].submit(req)
+    cs.nodes[1].q_prefill.append(req)       # same object on two nodes
+    with pytest.raises(InvariantViolation, match="residency"):
+        dispatch_once(cs)
+
+
+def test_energy_overcharge_is_caught():
+    cs = make_cluster(sanitize=True)
+    s = cs.run(Workload.uniform(5, qps=4.0, in_tokens=512, out_tokens=8,
+                                seed=3))
+    assert s.n_finished > 0 and cs.loop.sanitizer.checks > 0
+    cs.records[0].energy_j += 1e9           # joules nobody drew
+    with pytest.raises(InvariantViolation, match="energy"):
+        dispatch_once(cs)
+
+
+# ---------------------------------------------------------------------------
+# read-only guarantee + fleet churn under the sanitizer
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_is_read_only_bit_identical():
+    def wl():
+        return Workload.longbench_like(40, qps=8.0, seed=11)
+
+    s_off = make_cluster().run(wl())
+    cs_on = make_cluster(sanitize=True)
+    s_on = cs_on.run(wl())
+    assert cs_on.loop.sanitizer.checks > 0
+    assert dataclasses.asdict(s_on) == dataclasses.asdict(s_off)
+
+
+def test_fleet_churn_runs_clean_under_sanitizer():
+    cs = make_cluster(n_nodes=3)
+    fm = FleetManager(cs, FleetConfig(elastic=True), sanitize=True)
+    assert cs.loop.sanitizer is not None
+    fm.schedule_fail(5.0, 1)
+    fm.schedule_join(12.0, 1)
+    s = cs.run(Workload.uniform(40, qps=6.0, in_tokens=2048, out_tokens=64,
+                                seed=5))
+    assert cs.loop.sanitizer.checks > 0
+    assert s.n_finished > 0
+    cs.assert_facility_invariant()

@@ -1,6 +1,5 @@
 """Real-compute disaggregated engine: KV handoff through the ring buffer,
 continuous batching with per-slot positions, exact token-level consistency."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

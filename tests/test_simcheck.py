@@ -1,0 +1,278 @@
+"""simcheck static pass: fixture-driven positive/negative tests for each
+rule (RC001-RC005), fingerprint stability under line moves, baseline
+round-trip/staleness, CLI exit codes, and the repo-tree-is-clean gate."""
+import textwrap
+from pathlib import Path
+
+from repro.analysis.check.__main__ import main as simcheck_main
+from repro.analysis.check.baseline import (load_baseline, split_by_baseline,
+                                           write_baseline)
+from repro.analysis.check.rules import Severity, check_paths, check_source
+
+CORE = Path("src/repro/core/cluster.py")        # in_core, not RC003 scope
+PM = Path("src/repro/core/power_manager.py")    # the RC001 writer home
+SIM = Path("src/repro/core/simulator.py")       # RC003 scope
+OUT = Path("src/repro/serving/engine.py")       # outside core/
+
+
+def rc(source, path, rule):
+    return [f for f in check_source(textwrap.dedent(source), path)
+            if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# RC001: budget/cap writes only through the conservation API
+# ---------------------------------------------------------------------------
+
+def test_rc001_flags_budget_write_outside_api():
+    fs = rc("""
+        class Coordinator:
+            def rebalance(self, node) -> None:
+                node.pm.budget = 1000.0
+    """, CORE, "RC001")
+    assert len(fs) == 1
+    assert fs[0].severity is Severity.ERROR
+    assert fs[0].qualname == "Coordinator.rebalance"
+    assert "budget" in fs[0].message
+
+
+def test_rc001_flags_cap_writes_outside_api():
+    fs = rc("""
+        def fix(pm) -> None:
+            pm.commanded[0] = 500.0
+            pm.effective = [0.0] * 8
+    """, OUT, "RC001")
+    assert len(fs) == 2
+
+
+def test_rc001_flags_non_writer_method_inside_power_manager():
+    # tick may write caps but NOT budget state
+    fs = rc("""
+        class PowerManager:
+            def tick(self, now: float) -> None:
+                self.budget = 0.0
+    """, PM, "RC001")
+    assert len(fs) == 1
+
+
+def test_rc001_allows_the_conservation_api():
+    fs = rc("""
+        class PowerManager:
+            def __init__(self) -> None:
+                self.budget = 4000.0
+                self.commanded = [500.0] * 8
+            def shrink_budget(self, now: float, watts: float) -> None:
+                self._budget_target = self.budget - watts
+            def commit_budget(self, now: float) -> None:
+                self.budget = self._budget_target
+            def set_cap(self, now: float, g: int, w: float) -> None:
+                self.commanded[g] = w
+    """, PM, "RC001")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RC002: no wall clock / unseeded randomness in core/
+# ---------------------------------------------------------------------------
+
+def test_rc002_flags_wallclock_and_unseeded_randomness():
+    fs = rc("""
+        import random
+        import time
+        import numpy as np
+
+        def jitter() -> float:
+            return time.time() + random.random() + float(np.random.rand())
+    """, CORE, "RC002")
+    assert sorted(f.token for f in fs) == \
+        ["np.random.rand", "random.random", "time.time"]
+
+
+def test_rc002_allows_seeded_rng_and_ignores_non_core():
+    ok = """
+        import numpy as np
+
+        def gen(seed: int) -> object:
+            return np.random.default_rng(seed)
+    """
+    assert rc(ok, CORE, "RC002") == []
+    bad = """
+        import time
+
+        def stamp() -> float:
+            return time.time()
+    """
+    assert rc(bad, OUT, "RC002") == []      # outside core/: legal
+
+
+# ---------------------------------------------------------------------------
+# RC003: no float '+=' accumulation loops in simulator.py / fleet.py
+# ---------------------------------------------------------------------------
+
+def test_rc003_flags_float_accumulator_in_loop():
+    fs = rc("""
+        def total(steps) -> float:
+            e_j = 0.0
+            for s in steps:
+                e_j += s.dt * s.watts
+            return e_j
+    """, SIM, "RC003")
+    assert len(fs) == 1
+    assert "e_j" in fs[0].message and "cumsum" in fs[0].message
+
+
+def test_rc003_exempts_counters_and_per_item_writes():
+    fs = rc("""
+        def drain(reqs, dt) -> int:
+            n = 0
+            for r in reqs:
+                n += 1           # integer counter: exact arithmetic
+                r.t_end += dt    # per-item write keyed by the loop var
+            return n
+    """, SIM, "RC003")
+    assert fs == []
+
+
+def test_rc003_scope_is_simulator_and_fleet_only():
+    acc = """
+        def total(steps) -> float:
+            e_j = 0.0
+            for s in steps:
+                e_j += s.dt
+            return e_j
+    """
+    assert rc(acc, CORE, "RC003") == []     # cluster.py: out of scope
+
+
+# ---------------------------------------------------------------------------
+# RC004: every EventLoop post provably >= now
+# ---------------------------------------------------------------------------
+
+def test_rc004_flags_constant_time_push():
+    fs = rc("""
+        class Node:
+            def kick(self) -> None:
+                self.loop.push(5.0, self.handle, "tick")
+    """, OUT, "RC004")
+    assert len(fs) == 1
+    assert fs[0].token == "push(5.0)"
+    assert fs[0].qualname == "Node.kick"
+
+
+def test_rc004_accepts_now_derived_and_time_returning_expressions():
+    fs = rc("""
+        class Node:
+            def later(self, dt: float) -> None:
+                self.loop.push(self.loop.now + dt, self.handle, "a")
+
+            def clamped(self, t: float) -> None:
+                t = max(t, self.loop.now)
+                self.loop.push(t, self.handle, "b")
+
+            def after_shift(self, pm) -> None:
+                t_ready, freed = pm.shift(0.0, [0], [1], 50.0)
+                self.loop.push(t_ready, self.handle, "c")
+    """, OUT, "RC004")
+    assert fs == []
+
+
+# ---------------------------------------------------------------------------
+# RC005: public core/ APIs fully annotated
+# ---------------------------------------------------------------------------
+
+def test_rc005_flags_unannotated_public_core_api():
+    fs = rc("""
+        def api(x):
+            return x
+
+        class Sim:
+            def step(self, dt) -> None:
+                pass
+
+            def _helper(self, y):
+                pass
+
+        class _Hidden:
+            def meth(self, z):
+                pass
+    """, CORE, "RC005")
+    assert sorted(f.token for f in fs) == ["def api", "def step"]
+    msgs = {f.token: f.message for f in fs}
+    assert "return type" in msgs["def api"]
+    assert "parameters dt" in msgs["def step"]
+
+
+def test_rc005_ignores_non_core_and_fully_annotated():
+    src = """
+        def api(x):
+            return x
+    """
+    assert rc(src, OUT, "RC005") == []
+    ok = """
+        class Sim:
+            def step(self, dt: float) -> None:
+                pass
+    """
+    assert rc(ok, CORE, "RC005") == []
+
+
+# ---------------------------------------------------------------------------
+# fingerprints, baseline, CLI
+# ---------------------------------------------------------------------------
+
+PUSH_SRC = ("class Node:\n"
+            "    def kick(self) -> None:\n"
+            "        self.loop.push(5.0, self.handle, 't')\n")
+
+
+def test_fingerprint_survives_line_moves():
+    fa = [f for f in check_source(PUSH_SRC, OUT) if f.rule == "RC004"]
+    fb = [f for f in check_source("\n\n# moved\n" + PUSH_SRC, OUT)
+          if f.rule == "RC004"]
+    assert fa[0].line != fb[0].line
+    assert fa[0].fingerprint == fb[0].fingerprint
+
+
+def test_path_normalized_to_repro_root():
+    fs = rc("def api(x):\n    return x\n",
+            Path("/somewhere/else/src/repro/core/x.py"), "RC005")
+    assert fs[0].path == "repro/core/x.py"
+
+
+def test_baseline_roundtrip_and_staleness(tmp_path):
+    findings = check_source(PUSH_SRC, OUT)
+    bl = tmp_path / "baseline.txt"
+    assert write_baseline(bl, findings) == len(findings) == 1
+    entries = load_baseline(bl)
+    new, suppressed, stale = split_by_baseline(findings, entries)
+    assert new == [] and len(suppressed) == 1 and stale == set()
+    entries.add("RC001 repro/gone.py::<module>::x.budget = 1")
+    new, suppressed, stale = split_by_baseline(findings, entries)
+    assert new == [] and len(stale) == 1
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.txt") == set()
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    mod = tmp_path / "mod.py"
+    mod.write_text(PUSH_SRC)
+    bl = tmp_path / "bl.txt"
+    assert simcheck_main([str(mod), "--baseline", str(bl)]) == 1
+    assert "RC004" in capsys.readouterr().out
+    assert simcheck_main([str(mod), "--baseline", str(bl),
+                          "--update-baseline"]) == 0
+    assert simcheck_main([str(mod), "--baseline", str(bl)]) == 0
+    assert simcheck_main([str(mod), "--baseline", str(bl),
+                          "--no-baseline"]) == 1
+
+
+def test_repo_tree_is_clean_against_checked_in_baseline():
+    repo = Path(__file__).resolve().parents[1]
+    findings, n_files = check_paths([str(repo / "src")])
+    baseline = load_baseline(repo / "simcheck-baseline.txt")
+    new, _suppressed, stale = split_by_baseline(findings, baseline)
+    assert n_files > 0
+    assert [f.render() for f in new] == []
+    assert stale == set()
