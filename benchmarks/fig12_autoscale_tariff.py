@@ -1,0 +1,192 @@
+"""Predictive autoscaling on a price-varying diurnal tariff (fig12 —
+beyond the paper; ROADMAP item 2, the fleet *decision* loop).
+
+The same two-day diurnal workload — trough, a 5.5x peak, trough, twice —
+runs against the same 4-node facility (2 serving, 2 dark standby) and the
+same electricity-price / carbon-intensity traces, under three membership
+policies:
+
+  static      the fleet never touches the standby pool: 2 nodes ride the
+              peak alone, far past their capacity knee;
+  reactive    ``PredictiveAutoscaler(mode="reactive")``: demand is the
+              *observed* trailing arrival rate, so every ramp is detected
+              only after the queue already built — standby nodes power on
+              mid-ramp and the migration/settle cost lands on top of peak
+              traffic;
+  predictive  ``mode="predictive"``: day 1 teaches the seasonal-naive
+              forecaster the diurnal shape; on day 2 the ramp is forecast
+              ``lead_s`` ahead and standby capacity is warm *before* load
+              arrives. Troughs consolidate to the cheapest node set
+              (worst trailing J/good-token drains first).
+
+All three arms pay the identical tariff: each request's spent joules are
+priced at the electricity price / carbon intensity in force when it
+finished (``GoodputSummary.cost_per_good_token_usd`` /
+``carbon_per_good_token_g``), and the router runs the price-weighted
+``cost`` policy throughout.
+
+Asserted here (fast mode too — this is a CI gate): predictive >= reactive
+>= static on SLO attainment, predictive strictly cheaper than reactive
+strictly cheaper than static in $/good-token, and the facility power
+invariant holds across every autoscaler decision.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
+from repro.configs import get_config
+from repro.core.autoscale import (AutoscaleConfig, PredictiveAutoscaler,
+                                  SignalTrace)
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import policy_4p4d
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.simulator import Workload
+
+N_NODES = 4
+STANDBY = (2, 3)                # dark pool; nodes 0-1 serve at t=0
+NODE_BUDGET_W = 4000.0
+POLICY = policy_4p4d(500)
+TTFT_SLO_S = 2.0
+TROUGH_QPS = 4.0                # whole-fleet arrival rates
+PEAK_QPS = 22.0                 # past the 2-node knee, inside the fleet's
+N_DAYS = 2                      # day 1 teaches the seasonal forecaster
+
+OFFPEAK_PRICE = 0.10            # $/kWh
+PEAK_PRICE = 0.35
+OFFPEAK_CARBON = 300.0          # gCO2/kWh
+PEAK_CARBON = 520.0
+
+
+def phase_sizes(fast: bool):
+    return (48, 288, 48) if fast else (144, 864, 144)
+
+
+def day_phases(fast: bool):
+    """(duration_s, qps) per phase of one diurnal day — durations are
+    n/qps exactly because arrivals are uniform."""
+    n1, n2, n3 = phase_sizes(fast)
+    return ((n1 / TROUGH_QPS, TROUGH_QPS),
+            (n2 / PEAK_QPS, PEAK_QPS),
+            (n3 / TROUGH_QPS, TROUGH_QPS))
+
+
+def day_len_s(fast: bool) -> float:
+    return sum(d for d, _ in day_phases(fast))
+
+
+def diurnal(fast: bool, seed: int) -> Workload:
+    n1, n2, n3 = phase_sizes(fast)
+
+    def mk(n: int, qps: float, s: int) -> Workload:
+        return Workload.uniform(
+            n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
+            ttft_slo=TTFT_SLO_S, tpot_slo=0.040)
+
+    phases = []
+    for d in range(N_DAYS):
+        phases += [mk(n1, TROUGH_QPS, seed + 3 * d),
+                   mk(n2, PEAK_QPS, seed + 3 * d + 1),
+                   mk(n3, TROUGH_QPS, seed + 3 * d + 2)]
+    return Workload.phased_mix(phases, name="diurnal_tariff")
+
+
+def tariff(fast: bool) -> tuple:
+    """Price/carbon traces shaped to the day: peak tariff during the peak
+    phase, off-peak otherwise, repeated for every simulated day."""
+    (t1, _), (t2, _), _ = day_phases(fast)
+    day = day_len_s(fast)
+    times, prices, carbons = [0.0], [OFFPEAK_PRICE], [OFFPEAK_CARBON]
+    for d in range(N_DAYS):
+        t0 = d * day
+        times += [t0 + t1, t0 + t1 + t2]
+        prices += [PEAK_PRICE, OFFPEAK_PRICE]
+        carbons += [PEAK_CARBON, OFFPEAK_CARBON]
+    price = SignalTrace(times, prices, name="price", units="$/kWh")
+    carbon = SignalTrace(times, carbons, name="carbon", units="gCO2/kWh")
+    return price, carbon
+
+
+def autoscale_cfg(mode: str, fast: bool) -> AutoscaleConfig:
+    day = day_len_s(fast)
+    return AutoscaleConfig(
+        mode=mode, period_s=2.0, lead_s=10.0,
+        target_util=0.75, scale_down_util=0.40,
+        min_nodes=1, holdoff_s=8.0,
+        bucket_s=2.0, window_s=min(20.0, day / 3.0),
+        # only the predictive arm knows the diurnal period
+        season_s=day if mode == "predictive" else None)
+
+
+def _run(mode: str, fast: bool, seed: int = 4):
+    cs = ClusterSimulator(get_config("llama31_8b"), POLICY, N_NODES,
+                          node_budget_w=NODE_BUDGET_W,
+                          ctrl_cfg=dyn_ctrl(gpu=False, ttft_slo=TTFT_SLO_S),
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          seed=7, router_policy="cost")
+    fm = FleetManager(cs, FleetConfig(elastic=True), standby=STANDBY)
+    price, carbon = tariff(fast)
+    asc = PredictiveAutoscaler(fm, autoscale_cfg(mode, fast),
+                               price_trace=price, carbon_trace=carbon)
+    asc.start()
+    s = cs.run(diurnal(fast, seed))
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (t, budgets, total)
+    assert all(np.isfinite(r.energy_j) and r.energy_j > 0
+               for r in cs.records), "every record must carry spent joules"
+    return cs, fm, asc, s
+
+
+def sweep(fast: bool):
+    rows = []
+    att, cost = {}, {}
+    for mode in ("static", "reactive", "predictive"):
+        cs, fm, asc, s = _run(mode, fast)
+        att[mode] = s.slo_attainment
+        cost[mode] = s.cost_per_good_token_usd
+        rows.append({
+            "arm": mode,
+            "slo_attainment": s.slo_attainment,
+            "goodput_rps": s.goodput_rps,
+            "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+            "avg_provisioned_w": s.avg_provisioned_w,
+            "qps_per_kw": s.qps_per_kw,
+            "total_energy_j": s.total_energy_j,
+            "energy_per_good_token_j": s.energy_per_good_token_j,
+            "total_cost_usd": s.total_cost_usd,
+            "cost_per_good_token_usd": s.cost_per_good_token_usd,
+            "total_carbon_g": s.total_carbon_g,
+            "carbon_per_good_token_g": s.carbon_per_good_token_g,
+            "decisions": [(round(t, 2), k, n)
+                          for t, k, n, *_ in asc.decision_trace],
+            "migrations": len(fm.migration_trace),
+            "churn": [(round(t, 2), k, n) for t, k, n in fm.churn_trace],
+            "final_budgets": [nd.pm.budget for nd in cs.nodes],
+        })
+        print(f"{mode:11s} att={s.slo_attainment*100:5.1f}%  "
+              f"TTFT p90 {s.p90_ttft:5.2f}s  "
+              f"$/Mtok {s.cost_per_good_token_usd*1e6:6.2f}  "
+              f"gCO2/Mtok {s.carbon_per_good_token_g*1e6:7.1f}  "
+              f"joins+leaves={len(asc.decision_trace)}")
+    print(f"\nSLO attainment:  predictive {att['predictive']*100:.1f}%  "
+          f">= reactive {att['reactive']*100:.1f}%  "
+          f">= static {att['static']*100:.1f}%")
+    print(f"$/good-token:    predictive {cost['predictive']*1e6:.2f}  "
+          f"< reactive {cost['reactive']*1e6:.2f}  "
+          f"< static {cost['static']*1e6:.2f}  ($/Mtok)")
+    assert att["predictive"] >= att["reactive"] >= att["static"], att
+    assert cost["predictive"] < cost["reactive"] < cost["static"], \
+        "powering capacity ahead of the ramp must buy strictly cheaper " \
+        "good tokens on the price-varying diurnal trace"
+    return rows
+
+
+def main(fast: bool = False):
+    tm = Timer().start()
+    rows = sweep(fast)
+    save_artifact("fig12_autoscale_tariff", {"sweep": rows}, timer=tm.stop())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

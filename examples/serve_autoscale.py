@@ -1,0 +1,101 @@
+"""Walkthrough: predictive autoscaling on an electricity-price / carbon
+tariff — the fleet's decision loop driving membership from the workload
+and the grid.
+
+Four MI300X nodes under one facility cap; two serve, two sit dark in the
+standby pool (their watts concentrate on the serving pair). A two-day
+diurnal stream runs against a time-of-use tariff whose peak price covers
+the traffic peak. The ``PredictiveAutoscaler``:
+
+  * feeds every admitted arrival to a trailing-window forecaster (EWMA
+    level + trend; seasonal-naive once day 1 has been observed);
+  * powers standby nodes on *ahead* of the day-2 ramp — the seasonal
+    forecast sees it coming ``lead_s`` early, so prefill capacity is warm
+    when the load lands;
+  * at troughs drains the node with the worst trailing J/good-token
+    (price-weighted marginal joules as tie-break) through the KV-aware
+    migration path, and re-levels its watts across the survivors.
+
+The price and carbon traces are first-class fleet inputs: the summary
+prices every request's spent joules at the tariff in force when it
+finished, so the run reports $/good-token and gCO2/good-token — the
+objective the decision loop optimizes.
+
+Run:  PYTHONPATH=src python examples/serve_autoscale.py
+"""
+import dataclasses
+
+from repro.configs import get_config
+from repro.core.autoscale import (AutoscaleConfig, PredictiveAutoscaler,
+                                  SignalTrace)
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.simulator import Workload
+
+TROUGH_QPS, PEAK_QPS = 4.0, 22.0
+DAY_S = 12.0 + 288 / PEAK_QPS + 12.0    # trough + peak + trough
+
+
+def diurnal(seed: int) -> Workload:
+    def mk(n, qps, s):
+        return Workload.uniform(
+            n, qps=qps, in_tokens=4096, out_tokens=256, seed=s,
+            ttft_slo=2.0, tpot_slo=0.040)
+    phases = []
+    for d in range(2):                   # two days: day 1 teaches the season
+        phases += [mk(48, TROUGH_QPS, seed + 3 * d),
+                   mk(288, PEAK_QPS, seed + 3 * d + 1),
+                   mk(48, TROUGH_QPS, seed + 3 * d + 2)]
+    return Workload.phased_mix(phases, name="diurnal")
+
+
+def main():
+    cfg = get_config("llama31_8b")
+    ctrl = dataclasses.replace(ControllerConfig(ttft_slo=2.0),
+                               allow_power=True, allow_gpu=False)
+    cluster = ClusterSimulator(
+        cfg, policy_4p4d(500), n_nodes=4, node_budget_w=4000.0,
+        ctrl_cfg=ctrl, cluster_cfg=ClusterConfig(allow_shift=True),
+        router_policy="cost",            # price-weighted joules dispatch
+    )
+    fleet = FleetManager(cluster, FleetConfig(elastic=True), standby=(2, 3))
+
+    # time-of-use tariff + grid carbon intensity, shaped to the day
+    peak_start, peak_end = 12.0, 12.0 + 288 / PEAK_QPS
+    knots, prices, carbons = [0.0], [0.10], [300.0]
+    for d in range(2):
+        knots += [d * DAY_S + peak_start, d * DAY_S + peak_end]
+        prices += [0.35, 0.10]
+        carbons += [520.0, 300.0]
+    price = SignalTrace(knots, prices, name="price", units="$/kWh")
+    carbon = SignalTrace(knots, carbons, name="carbon", units="gCO2/kWh")
+
+    scaler = PredictiveAutoscaler(
+        fleet,
+        AutoscaleConfig(mode="predictive", period_s=2.0, lead_s=10.0,
+                        window_s=14.0, holdoff_s=8.0, season_s=DAY_S),
+        price_trace=price, carbon_trace=carbon)
+    scaler.start()
+
+    print(f"facility budget: {cluster.facility_budget_w:.0f} W "
+          f"(2 serving + 2 standby nodes)")
+    summary = cluster.run(diurnal(seed=4))
+
+    print("\ndecision timeline (demand vs capacity, req/s, at the tariff):")
+    for t, kind, nid, demand, cap, p in scaler.decision_trace:
+        print(f"  t={t:6.1f}s  {kind:5s} node {nid}  "
+              f"demand {demand:5.1f} vs cap {cap:5.1f}  @ ${p:.2f}/kWh")
+    print(f"\nfleet: {summary.row()}")
+    print(f"  {summary.n_good} SLO-good requests; "
+          f"${summary.total_cost_usd:.4f} total electricity, "
+          f"{summary.total_carbon_g:.0f} gCO2 -> "
+          f"${summary.cost_per_good_token_usd * 1e6:.2f}/Mtok, "
+          f"{summary.carbon_per_good_token_g * 1e6:.0f} gCO2/Mtok")
+    for nd in cluster.nodes:
+        state = "up" if nd.pm.powered else "down"
+        print(f"  node {nd.node_id}: {state:4s} budget {nd.pm.budget:6.0f} W")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,17 +3,72 @@
 Exit status: 0 when every finding is either absent or suppressed by the
 baseline; 1 when new findings exist (CI fails on new findings only, so
 the baseline is the explicit, reviewable debt list).
+
+``--docstrings`` switches to a documentation-coverage gate (the prose
+sibling of RC005's annotation rule): every public module, class,
+function, and method in the given files must carry a docstring. No
+baseline applies — the gated surfaces (e.g. ``core/autoscale.py``) are
+expected to be fully documented.
 """
 from __future__ import annotations
 
 import argparse
+import ast
 import sys
 from pathlib import Path
-from typing import List, Optional
+from typing import Iterator, List, Optional
 
 from repro.analysis.check.baseline import (DEFAULT_BASELINE, load_baseline,
                                            split_by_baseline, write_baseline)
 from repro.analysis.check.rules import check_paths
+
+
+def _iter_py(paths: List[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        else:
+            yield path
+
+
+def check_docstrings(paths: List[str]) -> int:
+    """Docstring-coverage gate; returns the number of missing docstrings.
+
+    Public surface = the module itself, plus every top-level class /
+    function / method whose name (and enclosing class) is not
+    underscore-prefixed. ``__init__`` is exempt — the class docstring
+    covers construction.
+    """
+    missing: List[str] = []
+    n_public = 0
+    for path in _iter_py(paths):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        n_public += 1
+        if not ast.get_docstring(tree):
+            missing.append(f"{path}:1: module docstring missing")
+        scopes = [(tree, "")]
+        while scopes:
+            node, prefix = scopes.pop()
+            for child in ast.iter_child_nodes(node):
+                if not isinstance(child, (ast.ClassDef, ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                    continue
+                if child.name.startswith("_"):
+                    continue
+                n_public += 1
+                qual = f"{prefix}{child.name}"
+                if not ast.get_docstring(child):
+                    missing.append(f"{path}:{child.lineno}: public "
+                                   f"{'class' if isinstance(child, ast.ClassDef) else 'function'} "
+                                   f"`{qual}` has no docstring")
+                if isinstance(child, ast.ClassDef):
+                    scopes.append((child, f"{qual}."))
+    for line in missing:
+        print(line)
+    print(f"simcheck --docstrings: {n_public} public surfaces, "
+          f"{len(missing)} undocumented")
+    return len(missing)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -31,7 +86,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(entries still need human justification)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="suppress the summary line")
+    ap.add_argument("--docstrings", action="store_true",
+                    help="documentation-coverage gate: require docstrings "
+                         "on the public API of the given files (no baseline)")
     args = ap.parse_args(argv)
+
+    if args.docstrings:
+        return 1 if check_docstrings(args.paths) else 0
 
     findings, n_files = check_paths(args.paths)
     baseline_path = Path(args.baseline)

@@ -1,0 +1,423 @@
+"""Predictive standby-pool autoscaling and price/carbon-aware orchestration.
+
+The fleet layer (``core.fleet``) *executes* membership changes — joins that
+re-level facility watts, leaves that drain through KV-aware migration —
+but until now the join/leave schedule was an operator-given input. This
+module is the *decision* loop (ROADMAP item 2): a ``PredictiveAutoscaler``
+that sits on ``FleetManager`` and drives membership from the workload and
+the grid, so the objective the fleet optimizes becomes $/good-token and
+gCO2/good-token, not just J/good-token.
+
+Three pieces, all deterministic (no wall clock, no randomness — the golden
+macro/iter equivalence tests run scenarios with the autoscaler active):
+
+``SignalTrace``
+    A piecewise-constant time series on the *simulation* clock —
+    electricity price in $/kWh, grid carbon intensity in gCO2/kWh — given
+    to the fleet as a first-class input. The autoscaler samples it at its
+    decision ticks on the shared ``EventLoop``; ``goodput.summarize``
+    prices every request's spent joules against it. Trace timestamps need
+    not align with arrival timestamps: lookups clamp to the first/last
+    segment, so a trace shorter than the simulated day simply holds its
+    edge values.
+
+``ArrivalForecaster``
+    A trailing-window arrival-rate model: bucketed counts feed an EWMA
+    level + trend, and when a seasonal period is configured (the diurnal
+    day) a seasonal-naive term — the peak rate observed one period ago
+    across the forecast window — takes over once a full season exists.
+    Purely causal: it sees only arrivals with ``t <= now``, never the
+    workload's future entries.
+
+``PredictiveAutoscaler``
+    The policy. Every ``period_s`` on the shared loop it compares demand
+    (forecast rate over a ``lead_s`` horizon for mode ``"predictive"``;
+    the current observed rate for ``"reactive"``) against the live
+    membership's prefill capacity:
+
+    * **ramp ahead**: demand above ``target_util`` of capacity powers a
+      standby node on *before* the ramp arrives (``FleetManager.
+      schedule_join`` — survivors shrink toward the uniform share first,
+      source-before-sink), so prefill capacity is warm when load lands;
+    * **trough consolidation**: demand below ``scale_down_util`` of the
+      shrunken fleet's capacity drains the *worst* node — highest trailing
+      ``energy_per_good_token_j``, price-weighted marginal joules as the
+      tie-break — through the existing KV-aware migration path
+      (``schedule_leave``), and its watts re-level across the survivors.
+
+    Every decision is recorded in ``decision_trace`` with the signals it
+    was made on (demand, capacity, price), so a benchmark or an operator
+    can audit the loop after the fact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cluster import ClusterSimulator
+from repro.core.fleet import FleetManager
+from repro.core.simulator import NodeSimulator
+
+J_PER_KWH = 3.6e6
+
+
+class SignalTrace:
+    """Piecewise-constant time series (electricity price, carbon intensity).
+
+    ``values[i]`` holds from ``times[i]`` until ``times[i+1]``; lookups
+    before the first knot return the first value and lookups past the last
+    knot return the last value, so a trace covering less than the simulated
+    horizon degrades to its edge values instead of raising — price-trace /
+    arrival-trace timestamp misalignment is legal by construction.
+    """
+
+    def __init__(self, times: Sequence[float], values: Sequence[float],
+                 name: str = "", units: str = ""):
+        assert len(times) == len(values) and len(times) > 0, \
+            "a trace needs at least one (time, value) knot"
+        t = np.asarray(times, dtype=np.float64)
+        assert bool(np.all(np.diff(t) >= 0.0)), "trace times must ascend"
+        self.times = t
+        self.values = np.asarray(values, dtype=np.float64)
+        self.name = name
+        self.units = units
+
+    @classmethod
+    def constant(cls, value: float, name: str = "",
+                 units: str = "") -> "SignalTrace":
+        """A flat trace (useful as a neutral price/carbon input)."""
+        return cls([0.0], [value], name=name, units=units)
+
+    def value_at(self, t: float) -> float:
+        """Trace value in force at time ``t`` (edge-clamped)."""
+        i = int(self.times.searchsorted(t, side="right")) - 1
+        return float(self.values[max(i, 0)])
+
+    def values_at(self, ts: np.ndarray) -> np.ndarray:
+        """Vectorized ``value_at`` (edge-clamped), for summary pricing."""
+        idx = self.times.searchsorted(ts, side="right") - 1
+        return self.values[np.maximum(idx, 0)]
+
+    def mean_over(self, t0: float, t1: float) -> float:
+        """Time-weighted mean value over ``[t0, t1]`` (edge-clamped)."""
+        if t1 <= t0:
+            return self.value_at(t0)
+        knots = self.times[(self.times > t0) & (self.times < t1)]
+        edges = np.concatenate(([t0], knots, [t1]))
+        vals = self.values_at(edges[:-1])
+        return float(np.sum(vals * np.diff(edges)) / (t1 - t0))
+
+
+class ArrivalForecaster:
+    """Trailing-window arrival-rate forecaster (EWMA + seasonal-naive).
+
+    Arrivals are counted into fixed ``bucket_s`` buckets; the trailing
+    window keeps ``window_s`` worth of closed buckets. ``rate_now`` is the
+    EWMA of closed-bucket rates (newest last). ``forecast`` extrapolates
+    level + trend over the horizon and, when a seasonal period is set and a
+    full period of history exists, defers to the seasonal-naive rate — the
+    peak observed rate one season earlier across the forecast window —
+    which is what sees a diurnal ramp *coming* rather than arriving.
+
+    Deterministic and purely causal: state is only what ``observe`` was
+    fed, and all of it carries simulation timestamps.
+    """
+
+    def __init__(self, bucket_s: float = 2.0, window_s: float = 60.0,
+                 season_s: Optional[float] = None, alpha: float = 0.35):
+        assert bucket_s > 0 and window_s >= bucket_s
+        self.bucket_s = bucket_s
+        self.window_s = window_s
+        self.season_s = season_s
+        self.alpha = alpha
+        # trailing window of closed buckets: (bucket_index, count)
+        self._buckets: List[Tuple[int, int]] = []
+        self._cur_idx = 0
+        self._cur_count = 0
+        # seasonal history: bucket_index -> count, kept ~2 seasons deep
+        self._season: dict = {}
+        # trailing mean request shape (for capacity conversion)
+        self._tok_sum = 0.0
+        self._tok_n = 0
+
+    def _roll(self, idx: int) -> None:
+        """Close buckets up to (not including) bucket ``idx``."""
+        if idx <= self._cur_idx:
+            return
+        if self._cur_count or self._buckets:
+            self._buckets.append((self._cur_idx, self._cur_count))
+            if self.season_s is not None and self._cur_count:
+                self._season[self._cur_idx] = self._cur_count
+        self._cur_idx = idx
+        self._cur_count = 0
+        keep = idx - int(math.ceil(self.window_s / self.bucket_s))
+        while self._buckets and self._buckets[0][0] < keep:
+            self._buckets.pop(0)
+        if self.season_s is not None:
+            horizon = idx - int(2 * self.season_s / self.bucket_s) - 1
+            stale = [k for k in self._season if k < horizon]
+            for k in stale:
+                del self._season[k]
+
+    def observe(self, t: float, in_tokens: int = 0) -> None:
+        """Record one arrival at simulation time ``t``."""
+        self._roll(int(t / self.bucket_s))
+        self._cur_count += 1
+        if in_tokens:
+            self._tok_sum += in_tokens
+            self._tok_n += 1
+
+    @property
+    def has_data(self) -> bool:
+        """Whether any arrival has been observed at all. An autoscaler must
+        not act on an empty window — a zero forecast before the first
+        arrival is ignorance, not a trough."""
+        return bool(self._buckets) or self._cur_count > 0
+
+    def closed_buckets(self) -> int:
+        """How many closed buckets the trailing window currently holds —
+        the warmup gate: level/trend over one or two buckets is noise, and
+        a trend extrapolated over a long horizon amplifies it."""
+        return len(self._buckets)
+
+    def mean_input_tokens(self, default: float = 2048.0) -> float:
+        """Trailing mean prompt length (capacity conversion tokens->req/s)."""
+        return self._tok_sum / self._tok_n if self._tok_n else default
+
+    def _level_trend(self, now: float) -> Tuple[float, float]:
+        self._roll(int(now / self.bucket_s))
+        if not self._buckets:
+            return 0.0, 0.0
+        level = self._buckets[0][1] / self.bucket_s
+        prev = level
+        trend = 0.0
+        for _, count in self._buckets[1:]:
+            rate = count / self.bucket_s
+            trend = (1 - self.alpha) * trend + self.alpha * (rate - prev)
+            level = (1 - self.alpha) * level + self.alpha * rate
+            prev = rate
+        return level, trend / self.bucket_s   # trend per second
+
+    def rate_now(self, now: float) -> float:
+        """EWMA arrival rate (req/s) over the trailing window."""
+        return self._level_trend(now)[0]
+
+    def _seasonal_rate(self, t0: float, t1: float) -> Optional[float]:
+        """Peak observed bucket rate one season before ``[t0, t1]``, or
+        None if that span predates the history. Peak-seeking on purpose:
+        a provisioning forecast answers "what is the largest rate this
+        window will see", not "what is the average" — a mean would dilute
+        a ramp that starts mid-horizon into looking serveable."""
+        if self.season_s is None:
+            return None
+        lo = int((t0 - self.season_s) / self.bucket_s)
+        hi = max(int(math.ceil((t1 - self.season_s) / self.bucket_s)), lo + 1)
+        if lo < 0 or t0 < self.season_s:
+            return None               # no full season observed yet
+        peak = max(self._season.get(i, 0) for i in range(lo, hi))
+        return peak / self.bucket_s
+
+    def forecast(self, now: float, horizon_s: float) -> float:
+        """Predicted mean arrival rate (req/s) over ``[now, now+horizon]``.
+
+        Seasonal-naive (peak bucket rate one season earlier) once a full
+        season of history covers the target window; EWMA level + trend
+        extrapolation (floored at zero) otherwise. ``horizon_s=0``
+        degrades to ``rate_now``.
+        """
+        level, trend = self._level_trend(now)
+        seasonal = self._seasonal_rate(now, now + max(horizon_s,
+                                                      self.bucket_s))
+        if seasonal is not None:
+            # blend: the season knows the shape, the EWMA knows today's
+            # amplitude drift; weight the season fully at long horizons
+            return max(seasonal, level + trend * horizon_s, 0.0) \
+                if horizon_s > 0 else max(level, 0.0)
+        return max(level + trend * horizon_s, 0.0)
+
+
+@dataclasses.dataclass
+class AutoscaleConfig:
+    """Knobs for ``PredictiveAutoscaler`` (all times in sim seconds)."""
+    mode: str = "predictive"        # "predictive" | "reactive" | "static"
+    period_s: float = 2.0           # decision tick on the shared loop
+    lead_s: float = 12.0            # scale-up look-ahead (predictive)
+    target_util: float = 0.75       # scale up above this capacity fraction
+    scale_down_util: float = 0.40   # consolidate below this (post-shrink)
+    min_nodes: int = 1              # never drain below this many nodes
+    holdoff_s: float = 10.0         # min spacing before a scale-down
+    warmup_buckets: int = 3         # closed buckets required before acting
+    bucket_s: float = 2.0           # forecaster bucket
+    window_s: float = 60.0          # forecaster trailing window
+    season_s: Optional[float] = None   # diurnal period, if known
+
+
+class PredictiveAutoscaler:
+    """Standby-pool autoscaler + price/carbon-aware orchestrator.
+
+    Attaches to a ``FleetManager``; subscribes to the cluster's ``arrival``
+    channel to feed its forecaster, ticks every ``cfg.period_s`` on the
+    shared loop, and turns capacity pressure into fleet membership ops.
+    ``price_trace``/``carbon_trace`` become the cluster's tariff inputs
+    (``ClusterSimulator.summary`` then reports $/good-token and
+    gCO2/good-token), and the scale-down choice is price-weighted: the
+    node whose trailing SLO-good tokens were most expensive in joules
+    drains first.
+
+    Mode ``"static"`` keeps the machinery (ticks, traces, accounting) but
+    never changes membership — the baseline arm of fig12.
+    """
+
+    def __init__(self, fleet: FleetManager,
+                 cfg: Optional[AutoscaleConfig] = None,
+                 price_trace: Optional[SignalTrace] = None,
+                 carbon_trace: Optional[SignalTrace] = None):
+        self.fm = fleet
+        self.cs: ClusterSimulator = fleet.cs
+        self.loop = fleet.loop
+        self.cfg = cfg or AutoscaleConfig()
+        assert self.cfg.mode in ("predictive", "reactive", "static"), \
+            self.cfg.mode
+        self.forecaster = ArrivalForecaster(
+            bucket_s=self.cfg.bucket_s, window_s=self.cfg.window_s,
+            season_s=self.cfg.season_s)
+        self.price_trace = price_trace
+        self.carbon_trace = carbon_trace
+        # the traces are fleet-level inputs: the cluster summary prices
+        # every record against them
+        self.cs.price_trace = price_trace
+        self.cs.carbon_trace = carbon_trace
+        if price_trace is not None and self.cs.router.policy == "cost" \
+                and self.cs.router.price_fn is None:
+            # single-tariff fleet on the cost router: every node pays the
+            # same trace (per-facility price_fns belong to multi-facility
+            # setups and are passed to the router directly)
+            def _price(node_id: int, t: float) -> float:
+                return price_trace.value_at(t)
+            self.cs.router.price_fn = _price
+        self._last_action_t = -math.inf
+        # (t, action, node_id, demand_rps, capacity_rps, price)
+        self.decision_trace: List[tuple] = []
+        self.signal_trace: List[tuple] = []   # (t, demand, capacity, price)
+        self.loop.subscribe("arrival", self._on_arrival)
+
+    # ---------------- signals ----------------
+    def _on_arrival(self, payload: object) -> None:
+        rec = payload.rec if hasattr(payload, "rec") else payload
+        self.forecaster.observe(self.loop.now, rec.input_tokens)
+
+    def price_now(self) -> float:
+        """Electricity price in force at the current sim time ($/kWh)."""
+        return (self.price_trace.value_at(self.loop.now)
+                if self.price_trace is not None else 0.0)
+
+    def capacity_rps(self, nodes: Sequence[NodeSimulator]) -> float:
+        """Aggregate prefill capacity of ``nodes`` in requests/s, at their
+        *current* caps and the trailing mean prompt length."""
+        toks = self.forecaster.mean_input_tokens()
+        return sum(nd.prefill_capacity_tps() for nd in nodes) / max(toks, 1.0)
+
+    def demand_rps(self) -> float:
+        """Demand signal per the configured mode: look-ahead forecast for
+        ``predictive``, current observed rate otherwise."""
+        now = self.loop.now
+        if self.cfg.mode == "predictive":
+            return self.forecaster.forecast(now, self.cfg.lead_s)
+        return self.forecaster.rate_now(now)
+
+    # ---------------- membership pools ----------------
+    def _live(self) -> List[NodeSimulator]:
+        return [nd for nd in self.cs.active_nodes()
+                if not nd.leaving and not nd.defunct]
+
+    def _standby(self) -> List[NodeSimulator]:
+        return [nd for nd, act in zip(self.cs.nodes, self.cs.active)
+                if not act and not nd.leaving
+                and nd.node_id not in self.fm.pending_joins]
+
+    def _drain_score(self, nd: NodeSimulator) -> Tuple[float, float, int]:
+        """Ranking for trough power-off: worst trailing J/good-token first,
+        price-weighted marginal joules as tie-break, node id last (total
+        order — determinism)."""
+        s = nd.summary()
+        # joules spent with nothing good to show: the worst possible
+        # efficiency, not the 0.0 the division fallback reports
+        eff = (1e18 if s.total_energy_j > 0 and s.n_good == 0
+               else s.energy_per_good_token_j)
+        toks = self.forecaster.mean_input_tokens()
+        marginal = nd.marginal_joules_per_token(int(toks), 256)
+        if not math.isfinite(marginal):
+            marginal = 1e18
+        # price-weight the prospective signal: at $0 the tie-break is pure
+        # joules; under a live tariff it is the node's marginal $/token
+        weight = max(self.price_now(), 1.0 / J_PER_KWH) / J_PER_KWH
+        return (eff, marginal * weight, -nd.node_id)
+
+    # ---------------- decision tick ----------------
+    def start(self) -> None:
+        """Arm the periodic decision tick (call before ``cluster.run``)."""
+        self.loop.push(self.loop.now, self._handle, "autoscale")
+
+    def _handle(self, kind: str, payload: object = None) -> None:
+        assert kind == "autoscale", kind
+        # same discipline as fleet/cluster events: this tick reads
+        # cross-node state (capacities, trailing summaries), so macro
+        # iterations materialize first and plans revalidate afterwards
+        self.cs.sync_all()
+        self._tick()
+        self.cs.validate_all()
+        if self.loop.heap:
+            self.loop.push(self.loop.now + self.cfg.period_s, self._handle,
+                           "autoscale")
+
+    def _tick(self) -> None:
+        now = self.loop.now
+        live = self._live()
+        if not live or not self.forecaster.has_data:
+            return                 # an empty window is ignorance, not load
+        demand = self.demand_rps()
+        cap = self.capacity_rps(live)
+        price = self.price_now()
+        self.signal_trace.append((now, demand, cap, price))
+        if self.cfg.mode == "static":
+            return
+        if self.forecaster.closed_buckets() < self.cfg.warmup_buckets:
+            return                 # level/trend over <N buckets is noise
+        if demand > self.cfg.target_util * cap:
+            # scale-up is urgent — a steep ramp may need a node per tick,
+            # so only the tick period and the one-join-in-flight rule
+            # throttle it; ``holdoff_s`` protects the other direction
+            self._scale_up(now, demand, cap, price)
+        elif (now - self._last_action_t >= self.cfg.holdoff_s
+              and len(live) > self.cfg.min_nodes):
+            victim = max(live, key=self._drain_score)
+            rest = [nd for nd in live if nd is not victim]
+            shrunk = self.capacity_rps(rest)
+            # scale down only if the *shrunken* fleet still clears the
+            # scale-down watermark — hysteresis against flapping
+            if demand < self.cfg.scale_down_util * shrunk:
+                self._scale_down(now, victim, demand, shrunk, price)
+
+    def _scale_up(self, now: float, demand: float, cap: float,
+                  price: float) -> None:
+        if self.fm.pending_joins:
+            return                # one power-on handshake at a time
+        standby = self._standby()
+        if not standby:
+            return
+        # deterministic pick: lowest node id (homogeneous standby pool;
+        # heterogeneous pools would rank by spec efficiency here)
+        nid = min(standby, key=lambda nd: nd.node_id).node_id
+        self.fm.schedule_join(now, nid)
+        self._last_action_t = now
+        self.decision_trace.append((now, "join", nid, demand, cap, price))
+
+    def _scale_down(self, now: float, victim: NodeSimulator,
+                    demand: float, shrunk_cap: float, price: float) -> None:
+        self.fm.schedule_leave(now, victim.node_id)
+        self._last_action_t = now
+        self.decision_trace.append(
+            (now, "leave", victim.node_id, demand, shrunk_cap, price))

@@ -34,14 +34,15 @@ as ``role_flip`` events published on the shared loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
 from repro.configs.base import ModelConfig
 from repro.core.controller import (ControllerConfig, NodeStress, StaticPolicy)
 from repro.core.costmodel import MI300X, GPUSpec
 from repro.core.events import EventLoop
-from repro.core.goodput import GoodputSummary, RequestRecord, summarize
+from repro.core.goodput import (EnergySignal, GoodputSummary, RequestRecord,
+                                summarize)
 from repro.core.power_model import PowerModel
 from repro.core.simulator import NodeSimulator, SimRequest, Workload
 
@@ -78,16 +79,33 @@ class PowerAwareRouter:
     fall back to the capacity-relative load, so the policy degrades to
     ``capacity`` exactly when energy cannot distinguish the nodes.
 
+    ``cost`` — least marginal *dollars* per token, latency-constrained:
+    among the nodes whose load signal says this request would still meet
+    its TTFT SLO with headroom, pick the cheapest joules weighted by the
+    electricity price each node currently pays (``price_fn(node_id, now)``,
+    e.g. per-facility tariff traces from ``core.autoscale.SignalTrace``);
+    when no node has headroom, fall back to pure least-load. The latency
+    filter is load-bearing: marginal joules per token *falls* as a decode
+    batch fills (amortization), so ranking on price alone would pile every
+    request onto the busiest node.
+
     Ties (e.g. an idle homogeneous cluster) round-robin via a rotating
     start index so requests 0..k don't all pile onto node 0."""
 
-    POLICIES = ("capacity", "joules")
+    POLICIES = ("capacity", "joules", "cost")
 
-    def __init__(self, policy: str = "capacity"):
+    def __init__(self, policy: str = "capacity",
+                 price_fn: Optional[Callable[[int, float], float]] = None):
         assert policy in self.POLICIES, policy
         self.policy = policy
+        self.price_fn = price_fn
         self._rr = 0
         self.trace: List[tuple] = []    # (t, node_id)
+
+    def _price(self, node_id: int, now: float) -> float:
+        if self.price_fn is None:
+            return 1.0
+        return max(self.price_fn(node_id, now), 0.0)
 
     def pick(self, now: float, nodes: Sequence[NodeSimulator],
              req: Optional[SimRequest] = None) -> NodeSimulator:
@@ -95,11 +113,23 @@ class PowerAwareRouter:
         self._rr += 1
         order = list(nodes[k:]) + list(nodes[:k])
         extra = req.rec.input_tokens if req is not None else 0
-        if self.policy == "joules":
+        if self.policy in ("joules", "cost"):
             out = req.rec.output_tokens if req is not None else 256
-            node = min(order, key=lambda nd: (
-                nd.marginal_joules_per_token(extra, out),
-                nd.router_load(extra)))
+            if self.policy == "cost":
+                slo = req.rec.ttft_slo if req is not None else 1.0
+                fits = [nd for nd in order
+                        if nd.router_load(extra) <= 0.5 * slo]
+                if fits:
+                    node = min(fits, key=lambda nd: (
+                        nd.marginal_joules_per_token(extra, out)
+                        * self._price(nd.node_id, now),
+                        nd.router_load(extra)))
+                else:
+                    node = min(order, key=lambda nd: nd.router_load(extra))
+            else:
+                node = min(order, key=lambda nd: (
+                    nd.marginal_joules_per_token(extra, out),
+                    nd.router_load(extra)))
         else:
             node = min(order, key=lambda nd: nd.router_load(extra))
         self.trace.append((now, node.node_id))
@@ -176,6 +206,11 @@ class ClusterSimulator:
         # redistribution in flight pauses coordinator budget ops
         self.active: List[bool] = [True] * n_nodes
         self.churn_inflight = False
+        # tariff inputs (set by core.autoscale, or directly): when present,
+        # the summary prices spent joules into $/good-token and
+        # gCO2/good-token alongside J/good-token
+        self.price_trace: Optional[EnergySignal] = None
+        self.carbon_trace: Optional[EnergySignal] = None
         self.loop.subscribe("role_flip", self._on_role_flip)
 
     def active_nodes(self) -> List[NodeSimulator]:
@@ -244,6 +279,11 @@ class ClusterSimulator:
                 return
             node = (self.nodes[node_id] if node_id is not None
                     else self.route(req))
+            # announce the accepted arrival on the shared loop: the
+            # autoscaler's forecaster (and any other observer) sees exactly
+            # the stream the fleet admitted, at admission time — fleet
+            # requeues/migrations re-enter elsewhere and are not arrivals
+            self.loop.publish("arrival", req)
             node.handle("arrival", req)
         elif kind == "cluster_ctrl":
             self.sync_all()
@@ -447,7 +487,9 @@ class ClusterSimulator:
                                   else samples[-1][1])
             else:
                 per_node_w.append(sum(nd.pm.effective))
-        return summarize(self.records, duration, float(sum(per_node_w)))
+        return summarize(self.records, duration, float(sum(per_node_w)),
+                         price_trace=self.price_trace,
+                         carbon_trace=self.carbon_trace)
 
     def node_summaries(self) -> List[GoodputSummary]:
         return [nd.summary() for nd in self.nodes]

@@ -108,12 +108,22 @@ class FleetManager:
         self.churn_trace: List[tuple] = []    # (t, kind, node_id)
         self.migration_trace: List[tuple] = []  # (t, rid, src, reason, ctx)
         self.requeue_trace: List[tuple] = []    # (t, rid, src)
+        # joins dispatched but not yet activated: the autoscaler must not
+        # double-join a node whose power-on handshake is still in flight
+        self.pending_joins: set = set()
         for nd in cluster.nodes:
             nd.migrator = self._migrate_out
+        released = 0.0
         for nid in standby:
             cluster.active[nid] = False
-            cluster.nodes[nid].pm.power_off(0.0)
+            released += cluster.nodes[nid].pm.power_off(0.0)
             cluster.nodes[nid].power_samples.append((0.0, 0.0))
+        if released > 0 and self.cfg.elastic and self.cfg.redistribute:
+            # a standby pool is provisioned dark: its watts re-level across
+            # the initially-active membership (raise-only — same path as a
+            # leave), so a 2-of-4 fleet starts with the facility's watts
+            # concentrated on the nodes actually serving
+            self._grow_survivors(released)
 
     # ---------------- schedule API ----------------
     # Callers pass wall-plan times that may already have passed once the
@@ -322,9 +332,11 @@ class FleetManager:
     # ---------------- join ----------------
     def _on_join(self, nid: int):
         if self.cs.active[nid]:
+            self.pending_joins.discard(nid)
             return
         now = self.loop.now
         node = self.cs.nodes[nid]
+        self.pending_joins.add(nid)
         self.churn_trace.append((now, "join", nid))
         if not (self.cfg.elastic and self.cfg.redistribute):
             # static arm: the node reclaims its stranded nameplate watts —
@@ -397,6 +409,7 @@ class FleetManager:
         node._role_version += 1
         absorbed = node.pm.power_on(now, grant)
         self.cs.active[nid] = True
+        self.pending_joins.discard(nid)
         node.start()                     # ctrl/sampling tick resumes
         self.churn_trace.append((now, "join_done", nid))
         self.cs.assert_facility_invariant()

@@ -17,9 +17,22 @@ goodput-relative energy price visibly worse.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Protocol
 
 import numpy as np
+
+J_PER_KWH = 3.6e6
+
+
+class EnergySignal(Protocol):
+    """A time series the summary can price spent joules against — the
+    structural type of ``core.autoscale.SignalTrace`` (price in $/kWh,
+    carbon intensity in gCO2/kWh). Kept as a Protocol so this module stays
+    below ``autoscale`` in the layering."""
+
+    def values_at(self, ts: np.ndarray) -> np.ndarray:
+        """Signal values in force at each timestamp (edge-clamped)."""
+        ...
 
 
 @dataclasses.dataclass
@@ -71,17 +84,32 @@ class GoodputSummary:
     total_energy_j: float = 0.0
     # spent joules per SLO-meeting output token; 0.0 when nothing met SLO
     energy_per_good_token_j: float = 0.0
+    # tariff attribution (0.0 unless price/carbon traces were provided):
+    # spent joules priced at the electricity price / carbon intensity in
+    # force when each request finished — the $/good-token and
+    # gCO2/good-token objectives the autoscaler optimizes
+    total_cost_usd: float = 0.0
+    cost_per_good_token_usd: float = 0.0
+    total_carbon_g: float = 0.0
+    carbon_per_good_token_g: float = 0.0
 
     def row(self) -> str:
-        return (f"good {self.slo_attainment*100:5.1f}%  goodput "
-                f"{self.goodput_rps:6.2f} req/s  TTFT p90 {self.p90_ttft:6.3f}s "
-                f"TPOT p90 {self.p90_tpot*1e3:6.1f}ms  "
-                f"QPS/kW {self.qps_per_kw:5.2f}  "
-                f"J/tok {self.energy_per_good_token_j:5.2f}")
+        s = (f"good {self.slo_attainment*100:5.1f}%  goodput "
+             f"{self.goodput_rps:6.2f} req/s  TTFT p90 {self.p90_ttft:6.3f}s "
+             f"TPOT p90 {self.p90_tpot*1e3:6.1f}ms  "
+             f"QPS/kW {self.qps_per_kw:5.2f}  "
+             f"J/tok {self.energy_per_good_token_j:5.2f}")
+        if self.total_cost_usd > 0.0:
+            s += f"  $/Mtok {self.cost_per_good_token_usd*1e6:6.2f}"
+        if self.total_carbon_g > 0.0:
+            s += f"  gCO2/Mtok {self.carbon_per_good_token_g*1e6:6.1f}"
+        return s
 
 
 def summarize(records: List[RequestRecord], duration_s: float,
-              avg_provisioned_w: float) -> GoodputSummary:
+              avg_provisioned_w: float,
+              price_trace: Optional[EnergySignal] = None,
+              carbon_trace: Optional[EnergySignal] = None) -> GoodputSummary:
     # Vectorized over preallocated arrays: one attribute pass per record,
     # then numpy for TTFT/TPOT/SLO math — fleet-scale summaries (tens of
     # thousands of records) were a visible chunk of benchmark wall time.
@@ -110,23 +138,48 @@ def summarize(records: List[RequestRecord], duration_s: float,
     good_mask = ((ttft <= ttft_slo[fin_mask] + 1e-9) &
                  (tpot <= tpot_slo[fin_mask] + 1e-9) & ~np.isnan(ttft))
     n_good = int(good_mask.sum())
-    ttfts = ttft if n_fin else np.array([np.inf])
-    tpots = tpot if n_fin else np.array([np.inf])
+    if n_fin:
+        p50_ttft, p90_ttft = np.percentile(ttft, (50, 90))
+        p50_tpot, p90_tpot = np.percentile(tpot, (50, 90))
+    else:
+        # percentile() of [inf] raises a spurious inf-inf RuntimeWarning
+        p50_ttft = p90_ttft = p50_tpot = p90_tpot = np.inf
     goodput = n_good / duration_s if duration_s > 0 else 0.0
     total_energy = float(energy.sum())
     good_tokens = float(out_tok[fin_mask][good_mask].sum())
+    # tariff attribution: a record's joules are priced at the trace value
+    # in force at its finish instant (arrival for never-finished requests —
+    # their partial work was spent around then). Piecewise-constant traces
+    # make this deterministic and cheap; sub-request price changes are
+    # below the tariff resolution this models (5-minute to hourly markets).
+    t_spend = np.where(np.isnan(fin_t), arrival, fin_t)
+    total_cost = cost_per_good = 0.0
+    if price_trace is not None:
+        cost = energy / J_PER_KWH * price_trace.values_at(t_spend)
+        total_cost = float(cost.sum())
+        cost_per_good = total_cost / good_tokens if good_tokens > 0 else 0.0
+    total_carbon = carbon_per_good = 0.0
+    if carbon_trace is not None:
+        carbon = energy / J_PER_KWH * carbon_trace.values_at(t_spend)
+        total_carbon = float(carbon.sum())
+        carbon_per_good = (total_carbon / good_tokens
+                           if good_tokens > 0 else 0.0)
     return GoodputSummary(
         n_total=n, n_finished=n_fin, n_good=n_good,
         slo_attainment=n_good / max(n, 1),
         goodput_rps=goodput,
-        p50_ttft=float(np.percentile(ttfts, 50)),
-        p90_ttft=float(np.percentile(ttfts, 90)),
-        p50_tpot=float(np.percentile(tpots, 50)),
-        p90_tpot=float(np.percentile(tpots, 90)),
+        p50_ttft=float(p50_ttft),
+        p90_ttft=float(p90_ttft),
+        p50_tpot=float(p50_tpot),
+        p90_tpot=float(p90_tpot),
         duration_s=duration_s,
         avg_provisioned_w=avg_provisioned_w,
         qps_per_kw=1000.0 * goodput / max(avg_provisioned_w, 1.0),
         total_energy_j=total_energy,
         energy_per_good_token_j=(total_energy / good_tokens
                                  if good_tokens > 0 else 0.0),
+        total_cost_usd=total_cost,
+        cost_per_good_token_usd=cost_per_good,
+        total_carbon_g=total_carbon,
+        carbon_per_good_token_g=carbon_per_good,
     )

@@ -197,3 +197,56 @@ def test_churn_roleflip_power_conservation(events, seed):
     cs.run(wl)
     assert cs.loop.sanitizer.checks > 0
     cs.assert_facility_invariant()
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: the decision loop never violates facility power conservation,
+# whatever workload shape / tariff / config it is handed — every membership
+# op it issues goes through the same source-before-sink machinery, and the
+# sanitizer validates every dispatch along the way
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["predictive", "reactive"]),
+       st.floats(2.0, 10.0),      # trough arrival rate
+       st.floats(12.0, 24.0),     # peak arrival rate
+       st.floats(0.05, 0.60),     # off-peak electricity price
+       st.integers(0, 999))
+def test_autoscaler_power_conservation(mode, trough, peak, price, seed):
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.autoscale import (AutoscaleConfig, PredictiveAutoscaler,
+                                      SignalTrace)
+    from repro.core.cluster import ClusterConfig, ClusterSimulator
+    from repro.core.controller import ControllerConfig, policy_4p4d
+    from repro.core.fleet import FleetConfig, FleetManager
+    from repro.core.simulator import Workload
+
+    ctrl = dataclasses.replace(ControllerConfig(), allow_power=True,
+                               ttft_slo=2.0)
+    cs = ClusterSimulator(get_config("llama31_8b"), policy_4p4d(500), 3,
+                          node_budget_w=4000.0, ctrl_cfg=ctrl,
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          seed=seed, router_policy="cost", sanitize=True)
+    fm = FleetManager(cs, FleetConfig(elastic=True), standby=(2,))
+    asc = PredictiveAutoscaler(
+        fm, AutoscaleConfig(mode=mode, period_s=2.0, window_s=12.0,
+                            holdoff_s=4.0, season_s=20.0),
+        price_trace=SignalTrace([0.0, 8.0, 20.0],
+                                [price, 3.0 * price, price]),
+        carbon_trace=SignalTrace([0.0], [400.0]))
+    asc.start()
+    wl = Workload.phased_mix([
+        Workload.uniform(20, qps=trough, in_tokens=2048, out_tokens=64,
+                         seed=seed, ttft_slo=2.0),
+        Workload.uniform(60, qps=peak, in_tokens=2048, out_tokens=64,
+                         seed=seed + 1, ttft_slo=2.0)])
+    # every dispatch is validated; any budget over-commit the decision
+    # loop could provoke (join during drain, leave of the power sink, ...)
+    # raises inside the run
+    cs.run(wl)
+    assert cs.loop.sanitizer.checks > 0
+    cs.assert_facility_invariant()
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (t, budgets)

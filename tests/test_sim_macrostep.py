@@ -224,6 +224,61 @@ def test_fleet_churn_and_migration_identical():
     assert ma[0].loop.dispatched < it[0].loop.dispatched / 2
 
 
+def test_autoscaler_active_identical():
+    """Golden run with the predictive autoscaler driving membership: its
+    decision ticks read cross-node state (capacities, trailing summaries)
+    and issue joins/leaves mid-flight, so every tick must land on a fully
+    materialized world in macro mode. Decision traces, signal traces,
+    per-request records (including energy), tariff-priced summaries, and
+    the fleet churn traces must all match to the last bit."""
+    from repro.core.autoscale import (AutoscaleConfig, PredictiveAutoscaler,
+                                      SignalTrace)
+
+    def run(fid):
+        cs = ClusterSimulator(
+            CFG, policy_4p4d(500), 3, node_budget_w=4000.0,
+            ctrl_cfg=ctrl(ttft_slo=2.0),
+            cluster_cfg=ClusterConfig(allow_shift=True),
+            seed=3, fidelity=fid, router_policy="cost")
+        fm = FleetManager(cs, FleetConfig(elastic=True), standby=(2,))
+        asc = PredictiveAutoscaler(
+            fm, AutoscaleConfig(mode="reactive", period_s=2.0,
+                                window_s=12.0, holdoff_s=6.0),
+            price_trace=SignalTrace([0.0, 12.0, 26.0], [0.1, 0.4, 0.1]),
+            carbon_trace=SignalTrace([0.0], [380.0]))
+        asc.start()
+        wl = Workload.phased_mix([
+            Workload.uniform(30, qps=3.0, in_tokens=4096, out_tokens=256,
+                             seed=4, ttft_slo=2.0),
+            Workload.uniform(160, qps=16.0, in_tokens=4096, out_tokens=256,
+                             seed=5, ttft_slo=2.0),
+            Workload.uniform(30, qps=3.0, in_tokens=4096, out_tokens=256,
+                             seed=6, ttft_slo=2.0)])
+        s = cs.run(wl)
+        return cs, fm, asc, s
+
+    res = {}
+    for fid in ("iter", "macro"):
+        cs, fm, asc, s = run(fid)
+        res[fid] = (cs, fm, asc, s,
+                    [(r.rid, r.arrival, r.prefill_done, r.finish, r.energy_j)
+                     for r in cs.records])
+    it, ma = res["iter"], res["macro"]
+    assert it[4] == ma[4]
+    assert dataclasses.asdict(it[3]) == dataclasses.asdict(ma[3])
+    assert it[2].decision_trace == ma[2].decision_trace
+    assert it[2].signal_trace == ma[2].signal_trace
+    assert it[1].churn_trace == ma[1].churn_trace
+    assert it[1].migration_trace == ma[1].migration_trace
+    assert it[0].router.trace == ma[0].router.trace
+    # the scenario must actually exercise the decision loop both ways,
+    # and the tariff must actually price the records
+    kinds = {k for _, k, *_ in it[2].decision_trace}
+    assert kinds == {"join", "leave"}, it[2].decision_trace
+    assert it[3].total_cost_usd > 0.0 and it[3].total_carbon_g > 0.0
+    assert ma[0].loop.dispatched < it[0].loop.dispatched / 2
+
+
 # ---------------------------------------------------------------------------
 # building-block properties the macro path relies on
 # ---------------------------------------------------------------------------

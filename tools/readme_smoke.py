@@ -1,0 +1,73 @@
+"""Run the README quickstart verbatim, so the front door can't rot.
+
+Extracts every fenced ``bash`` block that is immediately preceded by a
+``<!-- readme-smoke -->`` marker comment and executes each command line
+exactly as written (comments and blank lines skipped). A command that
+exits non-zero fails the run — if the README drifts from the code, CI's
+docs lane catches it here rather than a reader's terminal.
+
+Usage:
+    python tools/readme_smoke.py [README.md]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+MARKER = "<!-- readme-smoke -->"
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def extract_commands(text: str) -> list[str]:
+    """Command lines from marker-tagged ```bash blocks, in order."""
+    commands: list[str] = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() != MARKER:
+            i += 1
+            continue
+        # the marker must tag the fence on the next non-blank line
+        j = i + 1
+        while j < len(lines) and not lines[j].strip():
+            j += 1
+        m = FENCE.match(lines[j]) if j < len(lines) else None
+        if not m or m.group(1) not in ("bash", "sh", ""):
+            raise SystemExit(
+                f"{MARKER} on line {i + 1} is not followed by a bash fence")
+        j += 1
+        while j < len(lines) and not lines[j].startswith("```"):
+            cmd = lines[j].strip()
+            if cmd and not cmd.startswith("#"):
+                commands.append(cmd)
+            j += 1
+        i = j + 1
+    return commands
+
+
+def main(argv: list[str]) -> int:
+    readme = pathlib.Path(argv[1] if len(argv) > 1 else "README.md")
+    commands = extract_commands(readme.read_text())
+    if not commands:
+        print(f"error: no {MARKER} bash blocks found in {readme}",
+              file=sys.stderr)
+        return 2
+    print(f"{readme}: {len(commands)} quickstart command(s)")
+    for cmd in commands:
+        print(f"\n$ {cmd}", flush=True)
+        t0 = time.perf_counter()
+        proc = subprocess.run(["bash", "-c", cmd])
+        dt = time.perf_counter() - t0
+        if proc.returncode != 0:
+            print(f"FAILED (exit {proc.returncode}): {cmd}", file=sys.stderr)
+            return 1
+        print(f"ok ({dt:.1f}s)")
+    print(f"\nall {len(commands)} README commands passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
