@@ -21,6 +21,7 @@ Targets (the README's figure-reproduction table is generated from these):
     fig10hetero   heterogeneous nodes + cluster-scale DynGPU role flips
     fig11fleet    elastic fleet under diurnal load and node churn
     fig12autoscale predictive autoscaling on a price/carbon tariff
+    fig13chaos    chaos replay: graceful degradation vs naive handling
     simperf       simulator event-throughput benchmark (perf gate)
     roofline      per-(arch x shape) roofline table from dry-run artifacts
     kernels       interpret-mode Pallas kernel microbenchmarks vs jnp oracles
@@ -34,8 +35,8 @@ import time
 import traceback
 
 SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
-          "fig10hetero", "fig11fleet", "fig12autoscale", "simperf",
-          "roofline", "kernels", "beyond")
+          "fig10hetero", "fig11fleet", "fig12autoscale", "fig13chaos",
+          "simperf", "roofline", "kernels", "beyond")
 
 # one-liners for --list / unknown-target help, same order as SUITES
 DESCRIPTIONS = {
@@ -48,6 +49,7 @@ DESCRIPTIONS = {
     "fig10hetero": "heterogeneous nodes + cluster-scale DynGPU role flips",
     "fig11fleet": "elastic fleet under diurnal load and node churn",
     "fig12autoscale": "predictive autoscaling on a price/carbon tariff",
+    "fig13chaos": "chaos replay: graceful degradation vs naive handling",
     "simperf": "simulator event-throughput benchmark (perf gate)",
     "roofline": "per-(arch x shape) roofline table from dry-run artifacts",
     "kernels": "interpret-mode Pallas kernel microbenchmarks vs jnp oracles",
@@ -86,15 +88,16 @@ def main() -> None:
                             fig5_static_slo, fig6_queueing, fig7_slo_scaling,
                             fig8_dynamic, fig9_cluster_scaling,
                             fig10_hetero_dyngpu, fig11_elastic_fleet,
-                            fig12_autoscale_tariff, kernels_bench, roofline,
-                            sim_throughput)
+                            fig12_autoscale_tariff, fig13_chaos,
+                            kernels_bench, roofline, sim_throughput)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
         "fig8": fig8_dynamic, "fig9cluster": fig9_cluster_scaling,
         "fig10hetero": fig10_hetero_dyngpu,
         "fig11fleet": fig11_elastic_fleet,
-        "fig12autoscale": fig12_autoscale_tariff, "simperf": sim_throughput,
+        "fig12autoscale": fig12_autoscale_tariff, "fig13chaos": fig13_chaos,
+        "simperf": sim_throughput,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
     }

@@ -1,0 +1,91 @@
+"""Walkthrough: chaos day — a power emergency, a rack failure, and a
+lossy migration link, absorbed by the degradation ladder.
+
+Four MI300X nodes serve a steady stream when the facility's demand-
+response program slashes the effective cap to 55% of nameplate for eight
+seconds — and a traffic surge lands right inside the window. The
+``ChaosEngine`` scripts all of it on the shared event loop, so the whole
+bad day replays bit-identically from its seed:
+
+* the **emergency** force-throttles every node source-before-sink
+  (``PowerManager.emergency_shrink``), the autoscaler and coordinator
+  hold, and the freed watts re-level back when the cap restores;
+* the **surge** hits SLO-aware admission control: when projected TTFT
+  violates the SLO fleet-wide, the router sheds the lowest-value
+  requests instead of queueing everyone into violation — shed count and
+  energy are reported separately, not laundered;
+* the **rack failure** kills nodes 2 and 3 in one instant; the fleet
+  re-levels the pooled watts in ONE facility pass, and the victims'
+  requests re-enter through admission control;
+* the **link fault** drops KV transfers during node 1's graceful drain;
+  the migration engine retries with capped exponential backoff against
+  each request's deadline before degrading to requeue-with-KV-loss.
+
+Run:  PYTHONPATH=src python examples/serve_chaos.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.chaos import ChaosConfig, ChaosEngine
+from repro.core.cluster import AdmissionConfig, ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.simulator import Workload
+
+
+def main():
+    cfg = get_config("llama31_8b")
+    cluster = ClusterSimulator(
+        cfg, policy_4p4d(500), n_nodes=4,
+        node_budget_w=4000.0,              # deliberately power-constrained
+        ctrl_cfg=ControllerConfig(ttft_slo=2.0, allow_power=True,
+                                  allow_gpu=False),
+        cluster_cfg=ClusterConfig(allow_shift=True), seed=7,
+        admission=AdmissionConfig(slo_aware=True),
+    )
+    fleet = FleetManager(cluster, FleetConfig())
+    chaos = ChaosEngine(fleet, ChaosConfig(seed=7))
+    print(f"facility budget: {cluster.facility_budget_w:.0f} W "
+          f"({len(cluster.nodes)} nodes x 4000 W)")
+
+    chaos.schedule_power_emergency(5.0, frac=0.55, duration_s=8.0)
+    chaos.schedule_surge(6.0, n=40, qps=20.0, input_tokens=4096,
+                         output_tokens=256, ttft_slo=2.0, tpot_slo=0.040)
+    chaos.schedule_rack_failure(16.0, [2, 3])
+    fleet.schedule_join(22.0, 2)
+    fleet.schedule_join(22.5, 3)
+    chaos.schedule_link_fault(26.0, node_id=1, duration_s=1.0, mode="fail")
+    fleet.schedule_leave(26.0, 1)          # graceful drain over a bad link
+    fleet.schedule_join(32.0, 1)
+
+    t = Workload.poisson_arrivals(240, 8.0, np.random.default_rng(1))
+    wl = Workload([(float(ti), 4096, 256, 2.0, 0.040) for ti in t],
+                  name="steady")
+    summary = cluster.run(wl)
+
+    print("\nchaos script (as scheduled):")
+    for t0, kind, detail in chaos.trace:
+        print(f"  t={t0:6.2f}s  {kind:16s} {detail}")
+    print("\nemergency ladder (begin -> enforced -> end):")
+    for t0, kind, limit_w in fleet.emergency_trace:
+        print(f"  t={t0:6.2f}s  {kind:9s} effective limit {limit_w:7.0f} W")
+    print(f"\nmigration engine: {len(fleet.migration_trace)} arrivals, "
+          f"{len(fleet.retry_trace)} retries, "
+          f"{len(fleet.kv_loss_trace)} KV-loss fallbacks, "
+          f"{len(fleet.stall_trace)} stalls ridden out")
+    for t0, rid, src, why in fleet.kv_loss_trace[:4]:
+        print(f"  t={t0:6.2f}s  req {rid:4d} lost KV leaving node {src} "
+              f"({why}) -> re-prefill via admission")
+    shed = [r for r in cluster.records if r.shed_t is not None]
+    print(f"\nadmission control: shed {len(shed)} requests "
+          f"({summary.shed_energy_j:.0f} J already burned on them)")
+
+    print(f"\nfleet: {summary.row()}")
+    for nd in cluster.nodes:
+        state = "up" if nd.pm.powered else "down"
+        print(f"  node {nd.node_id}: {state:4s} budget {nd.pm.budget:6.0f} W "
+              f"roles {''.join(g.role[0].upper() for g in nd.gpus)}")
+
+
+if __name__ == "__main__":
+    main()

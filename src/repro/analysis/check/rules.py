@@ -38,6 +38,14 @@ RC005  Public ``core/`` APIs are fully type-annotated (parameters and
        return). The policy-core extraction (ROADMAP item 5) refactors
        against these signatures; unannotated boundaries are where
        refactors silently change types.
+
+RC006  Fault injection in ``core/`` only through the ChaosEngine API.
+       Installing a fault hook (``link_fault_fn``) with anything but
+       ``None``, or constructing a ``ChaosEngine``, is legal only inside
+       ``core/chaos.py`` — ad-hoc failure toggles scattered through the
+       core are exactly the unseeded, unreplayable chaos the fig13
+       bit-identical-rerun gate exists to prevent. (Benchmarks, examples
+       and tests live outside ``core/`` and drive the engine freely.)
 """
 from __future__ import annotations
 
@@ -80,8 +88,8 @@ class Finding:
 # --------------------------------------------------------------------------
 BUDGET_ATTRS = frozenset({"budget", "_budget_target"})
 BUDGET_WRITERS = frozenset({
-    "__init__", "shrink_budget", "commit_budget", "grow_budget",
-    "power_on", "power_off",
+    "__init__", "shrink_budget", "emergency_shrink", "commit_budget",
+    "grow_budget", "power_on", "power_off",
 })
 CAP_ATTRS = frozenset({"commanded", "effective"})
 CAP_WRITERS = frozenset({"__init__", "set_cap", "tick", "power_on",
@@ -100,8 +108,13 @@ SEEDED_NP_RANDOM = frozenset({"default_rng", "Generator", "SeedSequence",
 
 # RC004: PowerManager methods documented to return an enforcement-ready
 # time >= the ``now`` they were called with.
-TIME_RETURNING = frozenset({"shift", "shrink_budget", "distribute_uniform",
-                            "set_cap"})
+TIME_RETURNING = frozenset({"shift", "shrink_budget", "emergency_shrink",
+                            "distribute_uniform", "set_cap"})
+
+# RC006: fault-injection hooks that only core/chaos.py may install (any
+# non-None write outside it), plus the engine class itself.
+FAULT_HOOK_ATTRS = frozenset({"link_fault_fn"})
+CHAOS_CLASSES = frozenset({"ChaosEngine"})
 
 # RC003: names that smell like per-iteration float quantities (times,
 # energies, watts). Integer counters (tokens, ctx sums, queue depths) are
@@ -171,6 +184,7 @@ class _Checker(ast.NodeVisitor):
         parts = self.path.split("/")
         self.in_core = "core" in parts
         self.in_power_manager = parts[-1] == "power_manager.py"
+        self.in_chaos = parts[-1] == "chaos.py"
         self.rc003_scope = (self.in_core
                            and parts[-1] in ("simulator.py", "fleet.py"))
 
@@ -395,6 +409,37 @@ class _Checker(ast.NodeVisitor):
                     out.append(n.value)
         return out
 
+    # ---------------- RC006 ----------------
+    def _rc006_assign(self, node: ast.AST, value: Optional[ast.AST]) -> None:
+        """Flag non-None writes to fault-injection hooks outside chaos.py
+        (``x.link_fault_fn = None`` — declaring/clearing the hook — is the
+        legal idiom everywhere)."""
+        if not self.in_core or self.in_chaos:
+            return
+        if not (isinstance(node, ast.Attribute)
+                and node.attr in FAULT_HOOK_ATTRS):
+            return
+        if value is None or (isinstance(value, ast.Constant)
+                             and value.value is None):
+            return      # bare declaration / clearing the hook
+        self.add("RC006", node,
+                 f"fault-injection hook {node.attr!r} installed outside "
+                 f"core/chaos.py — fault injection in core/ must go "
+                 f"through the ChaosEngine API so chaos schedules stay "
+                 f"seeded and replayable",
+                 token=ast.unparse(node))
+
+    def _rc006_call(self, node: ast.Call) -> None:
+        if not self.in_core or self.in_chaos:
+            return
+        dotted = _dotted(node.func) or ""
+        if dotted.split(".")[-1] in CHAOS_CLASSES:
+            self.add("RC006", node,
+                     f"{dotted} constructed inside core/ (outside chaos.py) "
+                     f"— the simulator core must stay fault-free unless a "
+                     f"caller wires a ChaosEngine in from outside",
+                     token=dotted)
+
     # ---------------- RC005 ----------------
     def _check_rc005(self, node: ast.FunctionDef) -> None:
         if not self.in_core:
@@ -442,10 +487,12 @@ class _Checker(ast.NodeVisitor):
     def visit_Assign(self, node: ast.Assign) -> None:
         for tgt in node.targets:
             self._rc001_target(tgt)
+            self._rc006_assign(tgt, node.value)
         self.generic_visit(node)
 
     def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
         self._rc001_target(node.target)
+        self._rc006_assign(node.target, node.value)
         self.generic_visit(node)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
@@ -455,6 +502,7 @@ class _Checker(ast.NodeVisitor):
 
     def visit_Call(self, node: ast.Call) -> None:
         self._rc002_call(node)
+        self._rc006_call(node)
         self.generic_visit(node)
 
 

@@ -13,7 +13,8 @@ every event dispatch:
   or zero when powered off), per node (worst-case draw
   ``sum(max(commanded, effective))`` within the node budget, in-flight
   budget shrinks counted at the old budget), per facility (node budgets
-  sum under the facility budget).
+  sum under the facility budget; once a power emergency's shrink is
+  enforced, promised budgets also fit the slashed effective limit).
 * **Monotone clock / causality** — no event is pushed with a timestamp
   in the past (which would run the shared clock backwards for every
   sibling node), and the dispatch clock never decreases.
@@ -166,6 +167,23 @@ class InvariantSanitizer:
                 f"power: node budgets sum to {total:.3f} W > facility "
                 f"budget {self.cluster.facility_budget_w:.3f} W "
                 f"(in-flight shrinks count at their old budgets)")
+        # power emergency: once the fleet reports the emergency shrink
+        # enforced, the *promised* budgets (in-flight shrinks at their
+        # targets) must also fit the slashed effective limit — allowing
+        # for node cap floors, which a powered node cannot go below
+        if (self.fleet is not None and self.cluster is not None
+                and getattr(self.fleet, "_emergency_enforced", False)):
+            promised = sum(nd.pm._usable_budget() for nd in nodes
+                           if nd.pm.powered)
+            floors = sum(nd.pm.budget_floor_w for nd in nodes
+                         if nd.pm.powered)
+            limit = max(self.cluster.facility_limit_w, floors)
+            if promised > limit + EPS_W:
+                raise InvariantViolation(
+                    f"power: emergency limit "
+                    f"{self.cluster.facility_limit_w:.3f} W in force but "
+                    f"promised node budgets sum to {promised:.3f} W "
+                    f"(floor allowance {floors:.3f} W)")
 
     # ---------------- invariant: KV single-residency ----------------
     def _check_residency(self, nodes: List[Any]) -> None:

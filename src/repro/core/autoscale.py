@@ -384,6 +384,14 @@ class PredictiveAutoscaler:
         self.signal_trace.append((now, demand, cap, price))
         if self.cfg.mode == "static":
             return
+        if self.fm.emergency_active:
+            # facility power emergency in force: membership changes are
+            # frozen — a join would land on a slashed budget (deferred
+            # anyway), and a drain-out would pile migration traffic onto a
+            # fleet that is busy force-throttling. Hold until it clears.
+            self.decision_trace.append(
+                (now, "emergency_hold", -1, demand, cap, price))
+            return
         if self.forecaster.closed_buckets() < self.cfg.warmup_buckets:
             return                 # level/trend over <N buckets is noise
         if demand > self.cfg.target_util * cap:

@@ -1,0 +1,176 @@
+"""Seeded, deterministic chaos harness for the elastic fleet.
+
+Real power-capped clusters are not perturbed politely: grid demand-response
+slashes the facility cap mid-burst, a rack PDU takes k nodes down in one
+instant, a transfer link drops or wedges mid-KV-migration, and traffic
+surges land exactly when capacity is scarcest. ``ChaosEngine`` injects
+these as *scenarios* — coordinated schedules on the shared ``EventLoop`` —
+not ad-hoc toggles, so an entire chaos run is a pure function of its seed:
+two runs with the same seed and schedule produce bit-identical per-request
+records (the fig13 gate), and every fault replays exactly under
+``RAPID_SANITIZE=1``.
+
+Fault classes and which layer absorbs each:
+
+* **Facility power emergency** (``schedule_power_emergency``) — the
+  facility's effective limit drops to a fraction of nameplate for a
+  window. Absorbed by ``FleetManager``/``PowerManager.emergency_shrink``:
+  source-before-sink force-throttle, joins clamp against the slashed
+  limit, autoscaler holds, coordinator freezes its power plan; the freed
+  headroom re-levels back on restore.
+* **Correlated rack failure** (``schedule_rack_failure``) — k co-located
+  nodes die in one instant. Absorbed by ``FleetManager._on_fail_group``:
+  per-node eviction/requeue, ONE facility re-level with the pooled watts.
+* **Migration link fault** (``schedule_link_fault``) — the source node's
+  outbound link drops (``mode="fail"``) or wedges (``mode="stall"``) for
+  a window. Absorbed by the migration engine's retry/timeout/backoff: a
+  failed transfer retries with capped exponential backoff against the
+  per-request deadline, then degrades to requeue-with-KV-loss; a stalled
+  transfer (and the pipelined burst behind it) simply waits the stall out.
+* **Load surge** (``schedule_surge``) — a seeded burst of extra arrivals.
+  Absorbed by SLO-aware admission control (``PowerAwareRouter.decide``):
+  overload sheds the lowest-value requests instead of queueing everyone
+  into violation.
+
+Determinism contract: randomness is drawn ONLY at schedule time (surge
+inter-arrival gaps, ``inject``'s scenario layout), from a
+``np.random.default_rng(seed)`` owned by this engine (simcheck RC002). The
+runtime fault hook ``_link_fault`` is a pure function of its arguments and
+the pre-built window list. simcheck RC006 enforces that this module is the
+only place in ``core/`` that installs fault hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fleet import FleetManager
+from repro.core.goodput import RequestRecord
+from repro.core.simulator import SimRequest
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Knobs for ``ChaosEngine``: the seed owns ALL schedule-time
+    randomness (the run itself is deterministic)."""
+    seed: int = 0
+    # a dropped transfer is detected this far into its (attempted)
+    # transfer time — the wasted link occupancy before the retry path runs
+    fail_detect_frac: float = 0.5
+
+
+class ChaosEngine:
+    """Fault scheduler bound to one ``FleetManager`` (and through it the
+    cluster and shared loop). Construct it, script a scenario with the
+    ``schedule_*`` calls (or ``inject`` for a seeded random one), then run
+    the cluster normally."""
+
+    def __init__(self, fleet: FleetManager,
+                 cfg: Optional[ChaosConfig] = None):
+        self.fm = fleet
+        self.cs = fleet.cs
+        self.loop = fleet.loop
+        self.cfg = cfg or ChaosConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.trace: List[tuple] = []     # (t_scheduled, kind, detail)
+        # per-node link fault windows: node_id -> [(t0, t1, mode)]
+        self._link_down: dict = {}
+        # the one sanctioned injection point (simcheck RC006)
+        fleet.link_fault_fn = self._link_fault
+
+    # ---------------- scenario scheduling ----------------
+    def schedule_power_emergency(self, t: float, frac: float,
+                                 duration_s: Optional[float] = None) -> None:
+        """Facility cap slashed to ``frac`` of nameplate at ``t`` for
+        ``duration_s`` (indefinite if ``None``)."""
+        self.trace.append((t, "power_emergency", (frac, duration_s)))
+        self.fm.schedule_emergency(t, frac, duration_s)
+
+    def schedule_rack_failure(self, t: float,
+                              node_ids: Sequence[int]) -> None:
+        """Rack-scope correlated failure: every listed node dies at ``t``
+        in one instant (one facility re-level, not k)."""
+        self.trace.append((t, "rack_failure", tuple(node_ids)))
+        self.fm.schedule_fail_group(t, node_ids)
+
+    def schedule_link_fault(self, t: float, node_id: int,
+                            duration_s: float, mode: str = "fail") -> None:
+        """Outbound KV-transfer link on ``node_id`` is faulty over
+        ``[t, t + duration_s)``: ``"fail"`` drops transfers (retry path),
+        ``"stall"`` wedges them (they wait the window out)."""
+        assert mode in ("fail", "stall"), mode
+        self.trace.append((t, "link_fault", (node_id, duration_s, mode)))
+        self._link_down.setdefault(node_id, []).append(
+            (t, t + duration_s, mode))
+        self._link_down[node_id].sort()
+
+    def schedule_surge(self, t: float, n: int, qps: float,
+                       input_tokens: int = 512, output_tokens: int = 128,
+                       ttft_slo: float = 1.0,
+                       tpot_slo: float = 0.040) -> None:
+        """Seeded traffic burst: ``n`` extra requests from ``t`` at
+        ``qps`` (exponential inter-arrival gaps drawn NOW, at schedule
+        time — the run itself stays deterministic). Call before
+        ``cluster.run``: the records pre-seed the cluster's ledger so run
+        termination accounts for them."""
+        self.trace.append((t, "surge", (n, qps)))
+        gaps = self.rng.exponential(1.0 / qps, size=n)
+        at = t + np.cumsum(gaps)
+        rid = len(self.cs.records)
+        for i in range(n):
+            rec = RequestRecord(rid + i, float(at[i]), input_tokens,
+                                output_tokens, ttft_slo=ttft_slo,
+                                tpot_slo=tpot_slo)
+            self.cs.records.append(rec)
+            self.loop.push(max(float(at[i]), self.loop.now),
+                           self.cs._handle, "arrival",
+                           (SimRequest(rec), None))
+
+    def inject(self, horizon_s: float, n_emergencies: int = 1,
+               emergency_frac: Tuple[float, float] = (0.5, 0.75),
+               emergency_dur_frac: float = 0.2,
+               n_rack_failures: int = 1, rack_size: int = 2,
+               rejoin_after_s: Optional[float] = None,
+               n_link_faults: int = 2,
+               link_fault_s: float = 0.5) -> None:
+        """Seeded random scenario over ``[0, horizon_s)``: emergencies,
+        correlated failures (with optional rejoins), and link faults laid
+        out by this engine's rng — the randomized-schedule half of the
+        chaos property tests. Deterministic per seed."""
+        for _ in range(n_emergencies):
+            t0 = float(self.rng.uniform(0.1, 0.7) * horizon_s)
+            frac = float(self.rng.uniform(*emergency_frac))
+            self.schedule_power_emergency(
+                t0, frac, emergency_dur_frac * horizon_s)
+        n_nodes = len(self.cs.nodes)
+        for _ in range(n_rack_failures):
+            t0 = float(self.rng.uniform(0.1, 0.8) * horizon_s)
+            k = min(rack_size, max(n_nodes - 1, 1))
+            start = int(self.rng.integers(0, max(n_nodes - k, 0) + 1))
+            rack = list(range(start, start + k))
+            self.schedule_rack_failure(t0, rack)
+            if rejoin_after_s is not None:
+                for nid in rack:
+                    self.fm.schedule_join(t0 + rejoin_after_s, nid)
+        for _ in range(n_link_faults):
+            t0 = float(self.rng.uniform(0.1, 0.9) * horizon_s)
+            nid = int(self.rng.integers(0, n_nodes))
+            mode = "fail" if self.rng.random() < 0.5 else "stall"
+            self.schedule_link_fault(t0, nid, link_fault_s, mode)
+
+    # ---------------- runtime fault hook ----------------
+    def _link_fault(self, src_id: int, t_start: float,
+                    dt: float) -> Optional[Tuple[str, float]]:
+        """Deterministic link verdict for a transfer occupying
+        ``[t_start, t_start + dt)`` on ``src_id``'s outbound link:
+        ``None`` (clean), ``("stall", t_resume)`` or
+        ``("fail", t_detect)``. Pure function of the window list."""
+        for (t0, t1, mode) in self._link_down.get(src_id, ()):
+            if t_start < t1 and t_start + dt > t0:
+                if mode == "stall":
+                    return ("stall", t1)
+                return ("fail",
+                        max(t0, t_start) + self.cfg.fail_detect_frac * dt)
+        return None

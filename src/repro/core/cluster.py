@@ -61,6 +61,31 @@ class ClusterConfig:
     gpu_cooldown_s: float = 6.0     # between role flips (drain is costly)
 
 
+@dataclasses.dataclass
+class AdmissionConfig:
+    """SLO-aware admission control (overload / emergency shedding).
+
+    When ``slo_aware`` is on, the router projects each request's TTFT
+    against the best available node *before* admitting it: requests whose
+    projection comfortably fits the SLO are admitted; requests that would
+    blow through it are *deferred* (retried after ``defer_s`` — queueing
+    delay moves to the front door where it is visible and cancellable) and
+    requests whose projection is hopeless even for their value class are
+    *shed* outright. Shedding is biased by request value — decode-heavy
+    requests (more output per unit of prefill cost, i.e. more goodput per
+    joule) tolerate a proportionally higher projection before being shed,
+    so under an emergency cap slash the fleet sheds the lowest-value work
+    first instead of queueing everyone into violation. A deferred request
+    keeps aging, so its projection only grows: every request terminally
+    resolves to admitted or shed."""
+    slo_aware: bool = False
+    defer_s: float = 0.25           # retry delay for deferred requests
+    defer_frac: float = 1.0         # admit while proj TTFT <= frac * SLO
+    shed_frac: float = 2.0          # shed when proj TTFT > frac * SLO * value
+    value_floor: float = 0.5        # clamp on the per-request value
+    value_ceil: float = 2.0         # multiplier (vs trailing mean density)
+
+
 class PowerAwareRouter:
     """Dispatch policies over the live node set:
 
@@ -95,12 +120,19 @@ class PowerAwareRouter:
     POLICIES = ("capacity", "joules", "cost")
 
     def __init__(self, policy: str = "capacity",
-                 price_fn: Optional[Callable[[int, float], float]] = None):
+                 price_fn: Optional[Callable[[int, float], float]] = None,
+                 admission: Optional[AdmissionConfig] = None):
         assert policy in self.POLICIES, policy
         self.policy = policy
         self.price_fn = price_fn
+        self.adm = admission or AdmissionConfig()
         self._rr = 0
         self.trace: List[tuple] = []    # (t, node_id)
+        self.shed_trace: List[tuple] = []   # (t, rid, projected_ttft)
+        self.defer_trace: List[tuple] = []  # (t, rid)
+        # trailing mean of request value density, for the shed bias
+        self._val_sum = 0.0
+        self._val_n = 0
 
     def _price(self, node_id: int, now: float) -> float:
         if self.price_fn is None:
@@ -135,6 +167,47 @@ class PowerAwareRouter:
         self.trace.append((now, node.node_id))
         return node
 
+    @staticmethod
+    def _density(req: SimRequest) -> float:
+        """Value proxy: output tokens per total token moved — goodput per
+        unit of serving cost. Decode-heavy requests score higher."""
+        total = req.rec.input_tokens + req.rec.output_tokens
+        return req.rec.output_tokens / max(total, 1)
+
+    def decide(self, now: float, nodes: Sequence[NodeSimulator],
+               req: SimRequest
+               ) -> "tuple[str, Optional[NodeSimulator]]":
+        """SLO-aware admission: returns ``("admit", node)``,
+        ``("defer", None)`` or ``("shed", None)``. With admission control
+        off this is exactly ``("admit", pick(...))`` — same trace, same
+        rotation — so the default path is bit-identical to the pre-
+        admission router."""
+        if not self.adm.slo_aware:
+            return "admit", self.pick(now, nodes, req)
+        extra = req.rec.input_tokens
+        best = min(nd.router_load(extra) for nd in nodes)
+        if not (best < float("inf")):
+            # every candidate momentarily unroutable (all draining): hold
+            self.defer_trace.append((now, req.rid))
+            return "defer", None
+        # projected TTFT: time already lost waiting + the best node's
+        # load signal (queue drain time for this request's tokens)
+        proj = (now - req.rec.arrival) + best
+        slo = req.rec.ttft_slo
+        dens = self._density(req)
+        if proj <= self.adm.defer_frac * slo:
+            self._val_sum += dens
+            self._val_n += 1
+            return "admit", self.pick(now, nodes, req)
+        mean = self._val_sum / self._val_n if self._val_n else dens
+        value = min(max(dens / max(mean, 1e-9), self.adm.value_floor),
+                    self.adm.value_ceil)
+        if proj > self.adm.shed_frac * slo * value:
+            self.shed_trace.append((now, req.rid, proj))
+            return "shed", None
+        self.defer_trace.append((now, req.rid))
+        return "defer", None
+
 
 class ClusterSimulator:
     """N ``NodeSimulator`` nodes on one clock under a facility power budget."""
@@ -151,7 +224,8 @@ class ClusterSimulator:
                  gpu_specs: Optional[Sequence[GPUSpec]] = None,
                  powers: Optional[Sequence[PowerModel]] = None,
                  fidelity: str = "macro", router_policy: str = "capacity",
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 admission: Optional[AdmissionConfig] = None):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
         resolves from the node's spec). When ``node_budgets`` is omitted,
@@ -162,7 +236,9 @@ class ClusterSimulator:
         decode) or ``"iter"`` (one event per decode iteration; the
         golden-equivalence path). ``router_policy``: see PowerAwareRouter.
         ``sanitize``: validate core invariants at every dispatch
-        (default: the ``RAPID_SANITIZE`` environment variable)."""
+        (default: the ``RAPID_SANITIZE`` environment variable).
+        ``admission``: SLO-aware admission control / load shedding at the
+        router front door (default off — see ``AdmissionConfig``)."""
         self.loop = EventLoop()
         if sanitize_enabled(sanitize):
             san = InvariantSanitizer()
@@ -182,6 +258,14 @@ class ClusterSimulator:
         assert len(budgets) == n_nodes
         self.facility_budget_w = facility_budget_w or float(sum(budgets))
         assert sum(budgets) <= self.facility_budget_w + 1e-6
+        # effective facility limit: normally the nameplate budget; a power
+        # emergency (core.fleet) slashes it for a window and restores it.
+        # Every grant/headroom computation clamps against the limit; the
+        # nameplate remains the hard conservation bound.
+        self.facility_limit_w = self.facility_budget_w
+        # an open emergency window: the coordinator holds its power plan
+        self.emergency_hold = False
+        self.n_shed = 0
         self.nodes = [
             NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
                           gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
@@ -190,7 +274,7 @@ class ClusterSimulator:
             for i in range(n_nodes)
         ]
         self.fidelity = fidelity
-        self.router = PowerAwareRouter(router_policy)
+        self.router = PowerAwareRouter(router_policy, admission=admission)
         self.ccfg = cluster_cfg or ClusterConfig()
         self.records: List[RequestRecord] = []
         self.shift_trace: List[tuple] = []    # (t, src, dst, watts)
@@ -277,8 +361,20 @@ class ClusterSimulator:
                 self.loop.push(now + 0.25, self._handle, "arrival",
                                (req, None))
                 return
-            node = (self.nodes[node_id] if node_id is not None
-                    else self.route(req))
+            if node_id is not None:
+                node = self.nodes[node_id]   # pinned traffic bypasses
+            else:                            # admission control
+                verdict, picked = self.router.decide(
+                    now, self.active_nodes(), req)
+                if verdict == "shed":
+                    self.mark_shed(req)
+                    return
+                if verdict == "defer":
+                    self.loop.push(now + self.router.adm.defer_s,
+                                   self._handle, "arrival", (req, None))
+                    return
+                assert picked is not None
+                node = picked
             # announce the accepted arrival on the shared loop: the
             # autoscaler's forecaster (and any other observer) sees exactly
             # the stream the fleet admitted, at admission time — fleet
@@ -305,11 +401,23 @@ class ClusterSimulator:
             # redistributed them at the failure instant); nothing to hand on
             return
         src.pm.commit_budget(now)
-        absorbed = dst.pm.grow_budget(now, freed) if dst.pm.powered else 0.0
-        if absorbed < freed - 1e-9:
+        # the sink takes only what still fits under the *effective* limit:
+        # an emergency that slashed the facility budget after this shift
+        # was scheduled (and retargeted the source's shrink to its own,
+        # tighter level) must not see the freed watts reappear on the sink.
+        # With no emergency the headroom covers ``freed`` exactly and this
+        # is the pre-existing grow/return-remainder flow, bit for bit.
+        headroom = max(self.facility_limit_w
+                       - sum(nd.pm.budget for nd in self.nodes), 0.0)
+        grant = min(freed, headroom) if dst.pm.powered else 0.0
+        absorbed = dst.pm.grow_budget(now, grant) if grant > 1e-12 else 0.0
+        back = min(freed - absorbed,
+                   max(self.facility_limit_w
+                       - sum(nd.pm.budget for nd in self.nodes), 0.0))
+        if back > 1e-9:
             # sink at its ceiling (or gone): return the remainder to the
             # source so facility watts are conserved
-            src.pm.grow_budget(now, freed - absorbed)
+            src.pm.grow_budget(now, back)
         self.shift_trace.append((now, src_id, dst_id, absorbed))
         self.assert_facility_invariant()
 
@@ -334,7 +442,7 @@ class ClusterSimulator:
         others_floor = sum(nd.pm.budget_floor_w for nd in self.active_nodes()
                            if nd.node_id != node_id)
         return min(self.nodes[node_id].pm.budget_ceil_w,
-                   self.facility_budget_w - others_floor)
+                   self.facility_limit_w - others_floor)
 
     def _watts_exhausted(self, stresses: List[NodeStress],
                          dst: NodeStress) -> bool:
@@ -410,7 +518,7 @@ class ClusterSimulator:
         c = self.ccfg
         live = self.active_nodes()
         if (c.allow_shift or c.allow_gpu_move) and live \
-                and not self.churn_inflight:
+                and not self.churn_inflight and not self.emergency_hold:
             stresses = [nd.stress_summary() for nd in live]
             dst = max(stresses, key=lambda s: s.stress)
             if dst.stress >= c.dst_stress_min:
@@ -427,9 +535,18 @@ class ClusterSimulator:
             self.loop.push(now + c.period_s, self._handle, "cluster_ctrl")
 
     # ---------------- driving ----------------
+    def mark_shed(self, req: SimRequest) -> None:
+        """Admission control rejected this request: it will never finish
+        (counts against SLO attainment) and its record carries the joules
+        it burned before rejection. Run termination accounts for it."""
+        req.rec.shed_t = self.loop.now
+        self.n_shed += 1
+
     def _seed_arrivals(self, workload: Optional[Workload],
                        pinned: Optional[Dict[int, Workload]]):
-        rid = 0
+        # start after any records pre-seeded before run() (e.g. a chaos
+        # surge scheduled up front): rids must stay unique
+        rid = len(self.records)
         streams = []
         if workload is not None:
             streams.append((None, workload))
@@ -450,7 +567,8 @@ class ClusterSimulator:
         done = 0
         for nd in self.nodes:
             done += nd.finished_count
-        return len(self.records) - done
+        # shed requests terminally resolved without finishing
+        return len(self.records) - done - self.n_shed
 
     def run(self, workload: Optional[Workload] = None,
             pinned: Optional[Dict[int, Workload]] = None,

@@ -45,11 +45,39 @@ experiment: churn still happens (it is the environment, not a policy), but
 leaves are handled like failures (no migration — in-flight work re-enters
 from scratch) and the departed node's watts stay stranded instead of being
 redistributed.
+
+**Graceful degradation (chaos paths).** The same machinery absorbs the
+fault scenarios ``core.chaos.ChaosEngine`` injects:
+
+* *Facility power emergencies* — ``schedule_emergency`` slashes the
+  facility's effective limit (``ClusterSimulator.facility_limit_w``) and
+  force-throttles every powered node toward the uniform share of the
+  emergency limit through ``PowerManager.emergency_shrink`` —
+  source-before-sink: caps cut first, watts released at the commit once
+  the lowered caps are in force. Join commits landing mid-emergency clamp
+  their grant against the *limit*, not the nameplate budget. On clear the
+  freed headroom re-levels back across the survivors.
+* *Correlated (rack-scope) failures* — ``schedule_fail_group`` fails k
+  co-located nodes in one instant and re-levels the facility ONCE with
+  the pooled released watts, instead of k sequential redistributions.
+* *Migration-link faults* — every KV transfer runs over the source
+  node's shared outbound link (a per-node link clock: concurrent drain
+  transfers *pipeline* back-to-back over ``node_link_bw``, paying the
+  fixed RPC setup once per burst). A transfer the chaos engine fails
+  retries with capped exponential backoff against a per-request
+  deadline; past the deadline (or the retry budget) it falls back to
+  requeue-with-KV-loss — the failure path. A stalled link delays the
+  whole burst behind it. KV single-residency holds throughout: a request
+  mid-transfer lives only in the migration ticket (zero residency).
+* *Overload* — requeues re-enter through the router's SLO-aware
+  admission control (``PowerAwareRouter.decide``), so a requeue storm
+  into an emergency-shrunk fleet sheds instead of queueing everyone into
+  violation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis.check.sanitize import InvariantSanitizer, sanitize_enabled
 from repro.core.cluster import ClusterSimulator
@@ -60,12 +88,36 @@ from repro.core.simulator import NodeSimulator, SimRequest
 class FleetConfig:
     elastic: bool = True            # False: no migration, no redistribution
     redistribute: bool = True       # facility re-level on churn (elastic)
-    migrate_latency_s: float = 0.002   # per-migration fixed setup (RPC)
+    migrate_latency_s: float = 0.002   # per-burst fixed setup (RPC); drain
+    #                                 transfers pipelining behind a burst
+    #                                 head pay it once
     requeue_latency_s: float = 0.25    # client retry after a node failure
     adopt_retry_s: float = 0.02     # decode pools saturated: retry placement
     drain_grace_s: float = 10.0     # leave deadline; then remaining work
     #                                 is failed out (maintenance is a hard
     #                                 window, not a suggestion)
+    # -- migration retry/timeout/backoff (chaos link faults) --
+    migrate_max_retries: int = 4    # 0: first fault = immediate KV loss
+    migrate_backoff_s: float = 0.05    # base retry delay, doubles per try
+    migrate_backoff_cap_s: float = 0.8
+    migrate_deadline_s: float = 8.0    # per-request migration deadline;
+    #                                 past it the KV is written off and the
+    #                                 request requeues from scratch
+
+
+@dataclasses.dataclass(eq=False)
+class _Migration:
+    """One in-flight KV transfer (identity semantics: the ticket travels
+    through retry events). The request it carries has ZERO residency —
+    it lives only here until ``migrate_arrive`` adopts it or the deadline
+    writes its KV off."""
+    req: SimRequest
+    src_id: int
+    reason: str
+    ctx: int
+    dt: float              # pure transfer time over node_link_bw
+    deadline: float        # absolute; requeue-with-KV-loss past this
+    attempt: int = 0
 
 
 class FleetManager:
@@ -108,6 +160,24 @@ class FleetManager:
         self.churn_trace: List[tuple] = []    # (t, kind, node_id)
         self.migration_trace: List[tuple] = []  # (t, rid, src, reason, ctx)
         self.requeue_trace: List[tuple] = []    # (t, rid, src)
+        # -- chaos / degradation state --
+        # per-source-node outbound link clock: the time the shared link is
+        # busy until — drain bursts pipeline behind it over node_link_bw
+        self._link_free: Dict[int, float] = {}
+        # the ONE sanctioned fault-injection point (simcheck RC006): the
+        # chaos engine installs a callable (src_id, t_start, dt) ->
+        # None | ("stall", t_resume) | ("fail", t_fail)
+        self.link_fault_fn: Optional[
+            Callable[[int, float, float],
+                     Optional[Tuple[str, float]]]] = None
+        self.retry_trace: List[tuple] = []    # (t, rid, src, attempt)
+        self.kv_loss_trace: List[tuple] = []  # (t, rid, src, why)
+        self.stall_trace: List[tuple] = []    # (t, rid, src, resume_t)
+        self.emergency_trace: List[tuple] = []  # (t, kind, limit_w)
+        self.emergency_active = False   # an emergency window is open
+        self._emergency_enforced = False  # shrinks committed, caps in force
+        self._emergency_gen = 0         # guards commit racing a restore
+        self._emergency_fracs: List[float] = []  # open windows; min() wins
         # joins dispatched but not yet activated: the autoscaler must not
         # double-join a node whose power-on handshake is still in flight
         self.pending_joins: set = set()
@@ -139,6 +209,28 @@ class FleetManager:
     def schedule_fail(self, t: float, node_id: int) -> None:
         self.loop.push(max(t, self.loop.now), self._handle, "fail", node_id)
 
+    def schedule_fail_group(self, t: float,
+                            node_ids: Sequence[int]) -> None:
+        """Correlated (rack-scope) failure: every listed node dies in the
+        same instant, and the facility re-levels ONCE with the pooled
+        released watts — not once per node."""
+        self.loop.push(max(t, self.loop.now), self._handle, "fail_group",
+                       tuple(node_ids))
+
+    def schedule_emergency(self, t: float, frac: float,
+                           duration_s: Optional[float] = None) -> None:
+        """Facility power emergency: at ``t`` the facility's effective
+        limit drops to ``frac`` of the nameplate budget for ``duration_s``
+        seconds (indefinitely if ``None`` — cleared by a later overlapping
+        schedule restoring it). Overlapping emergencies: the tighter limit
+        wins while both are open."""
+        assert 0.0 < frac <= 1.0
+        t0 = max(t, self.loop.now)
+        self.loop.push(t0, self._handle, "emergency_begin", frac)
+        if duration_s is not None:
+            self.loop.push(max(t0 + duration_s, self.loop.now),
+                           self._handle, "emergency_end", frac)
+
     # ---------------- event plumbing ----------------
     def _handle(self, kind: str, payload=None):
         # fleet events read and mutate cross-node state: same discipline as
@@ -157,14 +249,26 @@ class FleetManager:
             self._on_leave_force(payload)
         elif kind == "fail":
             self._on_fail(payload)
+        elif kind == "fail_group":
+            self._on_fail_group(payload)
         elif kind == "migrate_arrive":
-            self._on_migrate_arrive(*payload)
+            self._on_migrate_arrive(payload)
+        elif kind == "migrate_fail":
+            self._on_migrate_fail(payload)
+        elif kind == "migrate_retry":
+            self._start_transfer(payload)
         elif kind == "adopt_retry":
             self._try_adopt(payload)
         elif kind == "requeue":
             self._on_requeue(payload)
         elif kind == "regrow":
             self._grow_survivors(payload)
+        elif kind == "emergency_begin":
+            self._on_emergency_begin(payload)
+        elif kind == "emergency_commit":
+            self._on_emergency_commit(*payload)
+        elif kind == "emergency_end":
+            self._on_emergency_end(payload)
         else:
             raise ValueError(f"unknown fleet event {kind!r}")
         self.cs.validate_all()
@@ -185,22 +289,81 @@ class FleetManager:
                 self.loop.push(now, self._handle, "requeue", req)
                 continue
             ctx = req.rec.input_tokens + req.tokens_out
-            dt = node.cost.kv_migrate_time(ctx) + self.cfg.migrate_latency_s
             self._outbound[node.node_id] = \
                 self._outbound.get(node.node_id, 0) + 1
             self.migration_trace.append(
                 (now, req.rid, node.node_id, reason, ctx))
-            self.loop.push(now + dt, self._handle, "migrate_arrive",
-                           (req, node.node_id))
+            self._start_transfer(_Migration(
+                req=req, src_id=node.node_id, reason=reason, ctx=ctx,
+                dt=node.cost.kv_migrate_time(ctx),
+                deadline=now + self.cfg.migrate_deadline_s))
         if node.leaving:
             self.loop.push(now, self._handle, "leave_check", node.node_id)
 
-    def _on_migrate_arrive(self, req: SimRequest, src_id: int):
-        self._outbound[src_id] -= 1
-        self._try_adopt(req)
-        src = self.cs.nodes[src_id]
+    def _start_transfer(self, mig: _Migration) -> None:
+        """Put one KV transfer on the source node's shared outbound link.
+        Transfers pipeline: a burst of drain migrations queues back-to-back
+        over ``node_link_bw``, paying the fixed RPC setup once at the burst
+        head (an idle link) instead of once per request. The chaos engine's
+        ``link_fault_fn`` (if installed) may fail or stall the slot."""
+        now = self.loop.now
+        free = self._link_free.get(mig.src_id, 0.0)
+        if free <= now + 1e-12:
+            start = now + self.cfg.migrate_latency_s   # burst head: RPC setup
+        else:
+            start = max(now, free)                     # pipelined behind it
+        fault = (self.link_fault_fn(mig.src_id, start, mig.dt)
+                 if self.link_fault_fn is not None else None)
+        if fault is not None and fault[0] == "fail":
+            # link drops the transfer partway: the slot is wasted up to the
+            # detection point, then the retry path decides what happens
+            t_fail = max(fault[1], start)
+            self._link_free[mig.src_id] = t_fail
+            self.loop.push(t_fail, self._handle, "migrate_fail", mig)
+            return
+        if fault is not None and fault[0] == "stall":
+            # link wedged: the transfer (and the burst behind it) waits out
+            # the stall, then completes — no KV loss, just delay
+            start = max(fault[1], start)
+            self.stall_trace.append((now, mig.req.rid, mig.src_id, start))
+        done = max(start, now) + mig.dt
+        self._link_free[mig.src_id] = done
+        self.loop.push(done, self._handle, "migrate_arrive", mig)
+
+    def _on_migrate_fail(self, mig: _Migration) -> None:
+        """A transfer the link dropped: retry with capped exponential
+        backoff while the per-request deadline still admits another full
+        attempt; otherwise write the KV off and requeue from scratch —
+        exactly the failure path, so nothing new can go wrong here."""
+        now = self.loop.now
+        mig.attempt += 1
+        delay = min(self.cfg.migrate_backoff_s * (2.0 ** (mig.attempt - 1)),
+                    self.cfg.migrate_backoff_cap_s)
+        if (mig.attempt <= self.cfg.migrate_max_retries
+                and now + delay + mig.dt <= mig.deadline):
+            self.retry_trace.append(
+                (now, mig.req.rid, mig.src_id, mig.attempt))
+            self.loop.push(now + delay, self._handle, "migrate_retry", mig)
+            return
+        # give up: KV single-residency means the bytes in flight were the
+        # only copy — the request re-enters through the router from scratch
+        self._outbound[mig.src_id] -= 1
+        why = ("retries" if mig.attempt > self.cfg.migrate_max_retries
+               else "deadline")
+        self.kv_loss_trace.append((now, mig.req.rid, mig.src_id, why))
+        mig.req.reset_for_requeue()
+        self.requeue_trace.append((now, mig.req.rid, mig.src_id))
+        self.loop.push(now + self.cfg.requeue_latency_s,
+                       self._handle, "requeue", mig.req)
+        if self.cs.nodes[mig.src_id].leaving:
+            self._on_leave_check(mig.src_id)
+
+    def _on_migrate_arrive(self, mig: _Migration):
+        self._outbound[mig.src_id] -= 1
+        self._try_adopt(mig.req)
+        src = self.cs.nodes[mig.src_id]
         if src.leaving:
-            self._on_leave_check(src_id)
+            self._on_leave_check(mig.src_id)
 
     def _try_adopt(self, req: SimRequest):
         """Resume a migrated request on a node with decode slack, most
@@ -229,13 +392,24 @@ class FleetManager:
                        self._handle, "adopt_retry", req)
 
     def _on_requeue(self, req: SimRequest):
+        now = self.loop.now
         live = [nd for nd in self.cs.active_nodes()
                 if not nd.leaving and not nd.defunct]
         if not live:
-            self.loop.push(self.loop.now + self.cfg.requeue_latency_s,
+            self.loop.push(now + self.cfg.requeue_latency_s,
                            self._handle, "requeue", req)
             return
-        self.cs.router.pick(self.loop.now, live, req).submit(req)
+        # re-entry goes through SLO-aware admission: a requeue storm into
+        # an emergency-shrunk fleet must shed, not queue into violation
+        verdict, node = self.cs.router.decide(now, live, req)
+        if verdict == "shed":
+            self.cs.mark_shed(req)
+        elif verdict == "defer":
+            self.loop.push(now + self.cs.router.adm.defer_s,
+                           self._handle, "requeue", req)
+        else:
+            assert node is not None
+            node.submit(req)
 
     # ---------------- leave (graceful drain) ----------------
     def _on_leave(self, nid: int):
@@ -308,7 +482,43 @@ class FleetManager:
         self._fail_node(
             nid, redistribute=self.cfg.elastic and self.cfg.redistribute)
 
+    def _on_fail_group(self, node_ids: Sequence[int]):
+        """Correlated failure: k co-located nodes die in one instant. The
+        eviction/power-off work runs per node, but the facility re-levels
+        ONCE with the pooled watts — each survivor sees a single budget
+        grow, not k sequential ones."""
+        now = self.loop.now
+        released = 0.0
+        any_down = False
+        for nid in node_ids:
+            if not self.cs.active[nid]:
+                continue
+            any_down = True
+            self.cs.active[nid] = False
+            self.churn_trace.append((now, "fail", nid))
+            if self.cs._flip_node == nid:
+                self.cs._flip_node = None
+            self.cs.nodes[nid].leaving = False
+            token = self._force_tokens.pop(nid, None)
+            if token is not None:
+                self.loop.cancel(token)
+            released = released + self._fail_node_core(nid)
+        if not any_down:
+            return
+        if self.cfg.elastic and self.cfg.redistribute and released > 0:
+            self._grow_survivors(released)
+        self.cs.assert_facility_invariant()
+
     def _fail_node(self, nid: int, redistribute: bool):
+        released = self._fail_node_core(nid)
+        if redistribute and released > 0:
+            self._grow_survivors(released)
+        self.cs.assert_facility_invariant()
+
+    def _fail_node_core(self, nid: int) -> float:
+        """Evict, requeue, and power off one failed node; returns the watts
+        it released WITHOUT redistributing them (the caller pools them —
+        correlated failures re-level once for the whole group)."""
         now = self.loop.now
         node = self.cs.nodes[nid]
         reqs = node.evict_for_failure()      # marks the node defunct
@@ -317,17 +527,11 @@ class FleetManager:
         for req in reqs:
             node.release_record(req)
             # KV and generated tokens are gone; the spent joules are not
-            req.tokens_out = 0
-            req.tok_mark = 0
-            req.e_mark = 0.0
-            req.decode_gpu = None
-            req.rec.prefill_done = None
+            req.reset_for_requeue()
             self.requeue_trace.append((now, req.rid, nid))
             self.loop.push(now + self.cfg.requeue_latency_s,
                            self._handle, "requeue", req)
-        if redistribute and released > 0:
-            self._grow_survivors(released)
-        self.cs.assert_facility_invariant()
+        return released
 
     # ---------------- join ----------------
     def _on_join(self, nid: int):
@@ -340,8 +544,9 @@ class FleetManager:
         self.churn_trace.append((now, "join", nid))
         if not (self.cfg.elastic and self.cfg.redistribute):
             # static arm: the node reclaims its stranded nameplate watts —
-            # nothing was re-leveled while it was away
-            headroom = self.cs.facility_budget_w - \
+            # nothing was re-leveled while it was away (clamped against the
+            # facility's *effective* limit: emergencies bind everyone)
+            headroom = self.cs.facility_limit_w - \
                 sum(nd.pm.budget for nd in self.cs.nodes)
             grant = min(headroom, self._nameplate[nid])
             self._activate(node, grant)
@@ -349,9 +554,11 @@ class FleetManager:
         # elastic join: facility-level DISTRIBUTEUNIFORMPOWER, source-
         # before-sink one level up — survivors shrink toward the uniform
         # share of the new membership first; the joiner powers on only when
-        # those shrinks are in force and their watts committed
+        # those shrinks are in force and their watts committed. The share
+        # is computed against the effective limit, not the nameplate: a
+        # join landing mid-emergency must fit the slashed budget.
         live = [nd for nd in self.cs.active_nodes() if nd.pm.powered]
-        uniform = self.cs.facility_budget_w / (len(live) + 1)
+        uniform = self.cs.facility_limit_w / (len(live) + 1)
         t_ready, shrunk = now, []
         for nd in live:
             target = max(min(uniform, nd.pm.budget_ceil_w),
@@ -374,8 +581,11 @@ class FleetManager:
         self.cs.churn_inflight = False
         node = self.cs.nodes[nid]
         # whatever the facility holds free NOW is what the joiner may take —
-        # recomputed from live budgets so concurrent churn cannot overdraw
-        avail = self.cs.facility_budget_w - \
+        # recomputed from live budgets so concurrent churn cannot overdraw,
+        # and against the *effective* limit so a join commit landing while
+        # an emergency slashed the facility budget clamps its grant (or
+        # defers entirely) instead of powering on at a stale share
+        avail = self.cs.facility_limit_w - \
             sum(nd.pm.budget for nd in self.cs.nodes)
         grant = min(avail, node.pm.budget_ceil_w)
         if grant < node.pm.budget_floor_w - 1e-9:
@@ -415,6 +625,89 @@ class FleetManager:
         self.cs.assert_facility_invariant()
         return absorbed
 
+    # ---------------- facility power emergency ----------------
+    def _on_emergency_begin(self, frac: float):
+        """Demand-response cap slash: the facility's effective limit drops
+        to ``frac`` of nameplate. Every powered node force-throttles toward
+        the uniform share of the new limit, source-before-sink: caps are
+        cut first (``PowerManager.emergency_shrink``, preemptive — it may
+        retarget an op already in flight, tighter wins), and the watts
+        release at ``emergency_commit`` once the lowered caps are in
+        force. The coordinator holds its power plan for the whole window
+        (``ClusterSimulator.emergency_hold``): shifting watts around mid-
+        emergency is how real incidents become outages."""
+        now = self.loop.now
+        self._emergency_fracs.append(frac)
+        limit = self.cs.facility_budget_w * min(self._emergency_fracs)
+        self.emergency_active = True
+        self._emergency_enforced = False
+        self._emergency_gen += 1
+        self.cs.emergency_hold = True
+        self.cs.facility_limit_w = limit
+        self.emergency_trace.append((now, "begin", limit))
+        powered = [nd for nd in self.cs.nodes if nd.pm.powered]
+        uniform = limit / max(len(powered), 1)
+        t_ready, shrunk = now, []
+        for nd in powered:
+            tr, _ = nd.pm.emergency_shrink(now, uniform)
+            t_ready = max(t_ready, tr)
+            if nd.pm.budget_op_inflight:
+                # ours or a coordinator shift we just retargeted: either
+                # way the commit must wait for every pending lower
+                shrunk.append(nd.node_id)
+                for ch in nd.pm.pending:
+                    t_ready = max(t_ready, ch.effective_at)
+        self.loop.push(t_ready, self._handle, "emergency_commit",
+                       (self._emergency_gen, tuple(shrunk)))
+
+    def _on_emergency_commit(self, gen: int, shrunk: Sequence[int]):
+        """Sink side of the emergency shrink: the lowered caps are now in
+        force, so the promised budgets become real. A commit superseded by
+        a newer (tighter) window is stale — the newer commit lists every
+        node still mid-op, so nothing is stranded."""
+        now = self.loop.now
+        if gen != self._emergency_gen:
+            return
+        for sid in shrunk:
+            pm = self.cs.nodes[sid].pm
+            if (pm.powered and pm.budget_op_inflight
+                    and sid not in self.cs._inflight):
+                # coordinator shifts commit on their own budget_ready path
+                # (their sink grant is clamped against the limit there)
+                pm.commit_budget(now)
+        if self.emergency_active:
+            self._emergency_enforced = True
+            self.emergency_trace.append(
+                (now, "enforced", self.cs.facility_limit_w))
+            self.cs.assert_facility_invariant()
+        else:
+            # the window closed before the shrinks landed (sub-enforce-
+            # latency emergency): restore what we just took
+            self._grow_survivors(self.cs.facility_budget_w)
+
+    def _on_emergency_end(self, frac: float):
+        now = self.loop.now
+        if frac in self._emergency_fracs:
+            self._emergency_fracs.remove(frac)
+        if self._emergency_fracs:
+            # an overlapping window is still open; relax to the tightest
+            # survivor (raise-only: growing toward a looser limit is safe)
+            limit = self.cs.facility_budget_w * min(self._emergency_fracs)
+            if limit > self.cs.facility_limit_w + 1e-9:
+                self.cs.facility_limit_w = limit
+                self.emergency_trace.append((now, "relax", limit))
+                self._grow_survivors(self.cs.facility_budget_w)
+            return
+        self.emergency_active = False
+        self._emergency_enforced = False
+        self.cs.emergency_hold = False
+        self.cs.facility_limit_w = self.cs.facility_budget_w
+        self.emergency_trace.append((now, "end", self.cs.facility_limit_w))
+        # freed headroom re-levels across the survivors (raise-only); if
+        # the shrink commit is still in flight it finishes the restore
+        self._grow_survivors(self.cs.facility_budget_w)
+        self.cs.assert_facility_invariant()
+
     # ---------------- facility re-leveling (raise-only side) -------------
     def _grow_survivors(self, watts: float) -> float:
         """Distribute freed watts across the active membership toward the
@@ -430,8 +723,9 @@ class FleetManager:
                 if nd.pm.powered and not nd.pm.budget_op_inflight]
         # a deferred re-offer may race a join that already granted (part
         # of) these watts: the live budgets are authoritative, so clamp the
-        # claim to what the facility actually still holds free
-        headroom = self.cs.facility_budget_w - \
+        # claim to what the facility actually still holds free — under the
+        # *effective* limit, so a regrow mid-emergency cannot undo the slash
+        headroom = self.cs.facility_limit_w - \
             sum(nd.pm.budget for nd in self.cs.nodes)
         left = watts = min(watts, max(headroom, 0.0))
         if watts <= 1e-6:

@@ -46,6 +46,12 @@ class RequestRecord:
     ttft_slo: float = 1.0
     tpot_slo: float = 0.040
     energy_j: float = 0.0          # busy-draw joules spent on this request
+    # SLO-aware admission control rejected this request (overload /
+    # emergency shedding). A shed request can never finish or meet SLO —
+    # it counts against attainment, and any joules it burned before being
+    # shed (e.g. pre-failure work before a requeue was rejected) are
+    # reported separately so degradation is visible, not laundered.
+    shed_t: Optional[float] = None
 
     @property
     def ttft(self) -> Optional[float]:
@@ -92,6 +98,11 @@ class GoodputSummary:
     cost_per_good_token_usd: float = 0.0
     total_carbon_g: float = 0.0
     carbon_per_good_token_g: float = 0.0
+    # load shedding (SLO-aware admission control): shed requests and the
+    # joules they burned before rejection, accounted separately — they are
+    # already counted against slo_attainment via n_total
+    n_shed: int = 0
+    shed_energy_j: float = 0.0
 
     def row(self) -> str:
         s = (f"good {self.slo_attainment*100:5.1f}%  goodput "
@@ -103,6 +114,8 @@ class GoodputSummary:
             s += f"  $/Mtok {self.cost_per_good_token_usd*1e6:6.2f}"
         if self.total_carbon_g > 0.0:
             s += f"  gCO2/Mtok {self.carbon_per_good_token_g*1e6:6.1f}"
+        if self.n_shed > 0:
+            s += f"  shed {self.n_shed}"
         return s
 
 
@@ -122,6 +135,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
     ttft_slo = np.empty(n)
     tpot_slo = np.empty(n)
     energy = np.empty(n)
+    shed = np.empty(n, dtype=bool)
     for i, r in enumerate(records):
         arrival[i] = r.arrival
         pd_[i] = np.nan if r.prefill_done is None else r.prefill_done
@@ -130,6 +144,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
         ttft_slo[i] = r.ttft_slo
         tpot_slo[i] = r.tpot_slo
         energy[i] = r.energy_j
+        shed[i] = r.shed_t is not None
     fin_mask = ~np.isnan(fin_t)
     n_fin = int(fin_mask.sum())
     ttft = pd_[fin_mask] - arrival[fin_mask]
@@ -182,4 +197,6 @@ def summarize(records: List[RequestRecord], duration_s: float,
         cost_per_good_token_usd=cost_per_good,
         total_carbon_g=total_carbon,
         carbon_per_good_token_g=carbon_per_good,
+        n_shed=int(shed.sum()),
+        shed_energy_j=float(energy[shed].sum()),
     )

@@ -248,9 +248,17 @@ class PowerManager:
         if freed <= 1e-9:
             return now, 0.0
         self._budget_target = target
-        # pre-existing in-flight lowers still count at their old caps in
-        # _worst_case(); the release may not happen before they land, even
-        # if no *new* cap cuts are needed
+        t_ready = self._lower_caps_to(now, target)
+        if self.sanitize:
+            self._sanity("shrink_budget")
+        return t_ready, freed
+
+    def _lower_caps_to(self, now: float, target: float) -> float:
+        """Cut GPU caps until the commanded total fits ``target``; returns
+        when every lowered cap (including pre-existing in-flight lowers,
+        which still count at their old caps in ``_worst_case()``) is in
+        force — the release may not happen before they land, even if no
+        *new* cap cuts are needed."""
         t_ready = max([now] + [ch.effective_at for ch in self.pending])
         excess = sum(self.commanded) - target
         if excess > 1e-9:
@@ -269,8 +277,32 @@ class PowerManager:
             for g in order[:chosen_k]:
                 if self.commanded[g] > level + 1e-9:
                     t_ready = max(t_ready, self.set_cap(now, g, level))
+        return t_ready
+
+    def emergency_shrink(self, now: float,
+                         target_w: float) -> Tuple[float, float]:
+        """Facility power emergency: force-throttle this node toward
+        ``target_w`` watts, source-before-sink like ``shrink_budget`` —
+        caps are cut first and the watts release only at the caller's
+        ``commit_budget`` once the lowered caps are in force. Unlike
+        ``shrink_budget`` this path is *preemptive*: it may land while a
+        coordinator budget op is already in flight on this node, in which
+        case the tighter of the two targets wins (the in-flight op's
+        commit then lands at the emergency target — the sink still
+        receives only the watts the op originally freed, so the facility
+        sum can only fall). Targets clamp at the node's cap floor: a
+        powered node cannot be throttled below spec minimums.
+
+        Returns ``(t_ready, freed)`` where ``freed`` is relative to the
+        currently-promised (usable) budget."""
+        target = max(min(target_w, self.budget), self.budget_floor_w)
+        freed = self._usable_budget() - target
+        if freed <= 1e-9:
+            return now, 0.0
+        self._budget_target = target
+        t_ready = self._lower_caps_to(now, target)
         if self.sanitize:
-            self._sanity("shrink_budget")
+            self._sanity("emergency_shrink")
         return t_ready, freed
 
     def commit_budget(self, now: float) -> None:

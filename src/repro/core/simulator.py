@@ -216,6 +216,17 @@ class SimRequest:                    # by object in the in-flight tables
     def rid(self) -> int:
         return self.rec.rid
 
+    def reset_for_requeue(self) -> None:
+        """KV and generated tokens are gone (node failure, or a migration
+        written off past its deadline); the request re-enters through the
+        router from scratch. The spent joules are NOT reset — wasted work
+        stays on the bill."""
+        self.tokens_out = 0
+        self.tok_mark = 0
+        self.e_mark = 0.0
+        self.decode_gpu = None
+        self.rec.prefill_done = None
+
 
 class MacroPlan:
     """A planned run of decode iterations at fixed batch composition/cap.

@@ -250,3 +250,52 @@ def test_autoscaler_power_conservation(mode, trough, peak, price, seed):
     cs.assert_facility_invariant()
     for t, budgets, total in cs.budget_trace:
         assert total <= cs.facility_budget_w + 1e-6, (t, budgets)
+
+
+# ---------------------------------------------------------------------------
+# Chaos schedules: power conservation + KV single-residency survive
+# randomized emergencies x correlated failures x lossy migrations
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 999),           # chaos layout seed
+       st.floats(0.45, 0.9),          # emergency depth (frac of nameplate)
+       st.integers(1, 2),             # correlated rack size
+       st.integers(0, 3),             # link faults
+       st.booleans())                 # retries on (degraded) vs off (naive)
+def test_chaos_schedule_invariants(seed, frac, rack, n_links, retries):
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.chaos import ChaosConfig, ChaosEngine
+    from repro.core.cluster import (AdmissionConfig, ClusterConfig,
+                                    ClusterSimulator)
+    from repro.core.controller import ControllerConfig, policy_4p4d
+    from repro.core.fleet import FleetConfig, FleetManager
+    from repro.core.simulator import Workload
+
+    ctrl = dataclasses.replace(ControllerConfig(), allow_power=True,
+                               ttft_slo=2.0)
+    cs = ClusterSimulator(get_config("llama31_8b"), policy_4p4d(500), 3,
+                          node_budget_w=4000.0, ctrl_cfg=ctrl,
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          seed=seed, sanitize=True,
+                          admission=AdmissionConfig(slo_aware=True))
+    fm = FleetManager(cs, FleetConfig(
+        migrate_max_retries=4 if retries else 0))
+    ch = ChaosEngine(fm, ChaosConfig(seed=seed))
+    ch.inject(horizon_s=8.0, emergency_frac=(frac, frac),
+              rack_size=rack, rejoin_after_s=2.5,
+              n_link_faults=n_links, link_fault_s=0.4)
+    # the sanitizer validates hierarchical power conservation AND KV
+    # single-residency at EVERY dispatch; a violation raises mid-run
+    cs.run(Workload.uniform(30, qps=5.0, in_tokens=2048, out_tokens=64,
+                            seed=seed, ttft_slo=2.0))
+    assert cs.loop.sanitizer.checks > 0
+    cs.assert_facility_invariant()
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (t, budgets)
+    # the ledger terminally resolves: finished or shed, nothing stranded
+    assert cs.n_unfinished() == 0
+    for r in cs.records:
+        assert (r.finish is not None) or (r.shed_t is not None)

@@ -1,5 +1,5 @@
 """simcheck static pass: fixture-driven positive/negative tests for each
-rule (RC001-RC005), fingerprint stability under line moves, baseline
+rule (RC001-RC006), fingerprint stability under line moves, baseline
 round-trip/staleness, CLI exit codes, and the repo-tree-is-clean gate."""
 import textwrap
 from pathlib import Path
@@ -214,6 +214,50 @@ def test_rc005_ignores_non_core_and_fully_annotated():
                 pass
     """
     assert rc(ok, CORE, "RC005") == []
+
+
+# ---------------------------------------------------------------------------
+# RC006: fault injection in core/ only through the ChaosEngine API
+# ---------------------------------------------------------------------------
+
+CHAOS = Path("src/repro/core/chaos.py")
+
+
+def test_rc006_flags_hook_install_in_core():
+    fs = rc("""
+        def arm(fleet) -> None:
+            fleet.link_fault_fn = my_hook
+    """, CORE, "RC006")
+    assert len(fs) == 1
+    assert "link_fault_fn" in fs[0].message
+
+
+def test_rc006_flags_chaos_engine_built_in_core():
+    fs = rc("""
+        def run(fleet) -> None:
+            ch = chaos.ChaosEngine(fleet)
+    """, CORE, "RC006")
+    assert len(fs) == 1
+    assert "ChaosEngine" in fs[0].token
+
+
+def test_rc006_allows_chaos_module_none_reset_and_non_core():
+    install = """
+        def arm(self) -> None:
+            self.fm.link_fault_fn = self._link_fault
+            eng = ChaosEngine(self.fm)
+    """
+    assert rc(install, CHAOS, "RC006") == []     # chaos.py owns the hook
+    assert rc(install, OUT, "RC006") == []       # outside core/: callers may
+    declare = """
+        class FleetManager:
+            def __init__(self) -> None:
+                self.link_fault_fn = None
+
+            def reset(self) -> None:
+                self.link_fault_fn = None
+    """
+    assert rc(declare, CORE, "RC006") == []      # declare/clear is legal
 
 
 # ---------------------------------------------------------------------------
