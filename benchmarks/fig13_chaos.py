@@ -124,11 +124,11 @@ def fingerprint(cs):
              r.shed_t) for r in cs.records]
 
 
-def sweep(fast: bool):
+def sweep(fast: bool, seed: int = 3):
     rows = []
     att = {}
     for name, degraded in (("naive", False), ("degraded", True)):
-        cs, fm, s = _run(degraded, fast)
+        cs, fm, s = _run(degraded, fast, seed)
         att[name] = s.slo_attainment
         rows.append({
             "arm": name,
@@ -157,18 +157,19 @@ def sweep(fast: bool):
         "retry + SLO-aware shedding must not lose to the naive failure " \
         "story under the same fault schedule and facility cap"
     # determinism gate: same arm, same seed, bit-identical records
-    cs_a, _, _ = _run(True, fast)
-    cs_b, _, _ = _run(True, fast)
+    cs_a, _, _ = _run(True, fast, seed)
+    cs_b, _, _ = _run(True, fast, seed)
     assert fingerprint(cs_a) == fingerprint(cs_b), \
         "chaos runs must be bit-identical per seed"
     print("rerun determinism: bit-identical per-request records  OK")
     return rows
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, seed: int = 3):
     tm = Timer().start()
-    rows = sweep(fast)
-    save_artifact("fig13_chaos", {"sweep": rows}, timer=tm.stop())
+    rows = sweep(fast, seed)
+    save_artifact("fig13_chaos", {"sweep": rows, "seed": seed},
+                  timer=tm.stop())
     return rows
 
 

@@ -1,0 +1,208 @@
+"""Control-plane chaos: fail-safe headless mode vs oracle control (beyond
+the paper).
+
+One seeded schedule combining the three control-plane faults from
+``core/telemetry.py`` + ``core/chaos.py`` — a telemetry freeze, a
+coordinator/autoscaler crash window, and a physical node death landing
+INSIDE the crash (with a traffic surge riding on top) — replayed against
+three fleets under the same facility cap:
+
+  oracle    the PR-8-era control story as an upper bound: perfect fresh
+            telemetry, the controller never dies, and node failure is
+            detected the instant it happens (``schedule_rack_failure``);
+  naive     controllers keep acting through the faults: stale/frozen
+            telemetry is trusted (``act_on_stale=True``), there is no
+            admission control, and the headless window admits everything
+            round-robin;
+  failsafe  the full fault-tolerance ladder: staleness holds (the
+            coordinator and autoscaler refuse to act past the staleness
+            bound), SLO-aware local admission while headless, heartbeat
+            failure detection (suspected -> dead, requeue at DETECTION
+            time, not death time), and epoch-fenced budget grants.
+
+All three arms face the identical data-plane faults (surge + node 3
+death + rejoin); only naive and failsafe face the control-plane faults
+(freeze + crash) — oracle shows what perfect control would buy.
+
+Asserted here (fast mode too — this is the CI ``chaos-smoke`` gate):
+
+* the failsafe arm's SLO attainment is >= the naive arm's under the
+  identical fault schedule and facility cap;
+* committed node budgets never exceed the facility nameplate in ANY arm
+  over the full budget trace — headless windows included (and under
+  ``RAPID_SANITIZE=1`` the per-dispatch headless + epoch-fence checks
+  run as well);
+* the crash trace shows the full crash -> restart ladder and the
+  heartbeat detector's suspected -> dead_detected ladder fires for the
+  dead node (failsafe arm);
+* the coordinator actually HELD on stale telemetry during the freeze
+  (hold trace non-empty in both faulted arms — naive records the holds
+  it refused to take);
+* two runs of the failsafe arm with the same seed produce bit-identical
+  per-request records — control-plane chaos is deterministic too.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
+from repro.configs import get_config
+from repro.core.chaos import ChaosConfig, ChaosEngine
+from repro.core.cluster import AdmissionConfig, ClusterConfig, ClusterSimulator
+from repro.core.controller import policy_4p4d
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.telemetry import (HeartbeatConfig, HeartbeatDetector,
+                                  TelemetryConfig)
+
+N_NODES = 4
+NODE_BUDGET_W = 4000.0          # power-constrained nodes (fig9 regime)
+POLICY = policy_4p4d(500)
+TTFT_SLO_S = 2.0
+TPOT_SLO_S = 0.040
+BASE_QPS = 8.0                  # steady arrivals; the surge rides on top
+DEAD_NODE = 3
+
+
+def n_requests(fast: bool) -> int:
+    return 160 if fast else 480
+
+
+def fault_schedule(fast: bool):
+    """Faults pinned to the workload's expected span ``T``: the telemetry
+    freeze opens early (controllers must hold), the controller crash
+    opens at 0.40T and the surge + node death land INSIDE it — the
+    headless data plane and the heartbeat detector carry the fleet until
+    the restart at 0.60T re-levels and recovers."""
+    T = n_requests(fast) / BASE_QPS
+    return {
+        "t_freeze": 0.15 * T, "freeze_dur": 0.20 * T,
+        "t_crash": 0.40 * T, "crash_dur": 0.20 * T,
+        "t_surge": 0.42 * T,
+        "n_surge": 120 if fast else 240, "surge_qps": 40.0,
+        "t_death": 0.45 * T,
+        "t_rejoin": 0.75 * T,
+    }
+
+
+def baseline(fast: bool, seed: int):
+    """Steady Poisson arrivals (drawn at build time — the run itself is
+    deterministic), identical across arms."""
+    from repro.core.simulator import Workload
+    n = n_requests(fast)
+    t = Workload.poisson_arrivals(n, BASE_QPS, np.random.default_rng(seed))
+    return Workload([(float(t[i]), 4096, 256, TTFT_SLO_S, TPOT_SLO_S)
+                     for i in range(n)], name="control_chaos_baseline")
+
+
+def _run(arm: str, fast: bool, seed: int = 3):
+    assert arm in ("oracle", "naive", "failsafe"), arm
+    telemetry = (TelemetryConfig(act_on_stale=True) if arm == "naive"
+                 else TelemetryConfig())
+    admission = (None if arm == "naive"
+                 else AdmissionConfig(slo_aware=True))
+    cs = ClusterSimulator(
+        get_config("llama31_8b"), POLICY, N_NODES,
+        node_budget_w=NODE_BUDGET_W,
+        ctrl_cfg=dyn_ctrl(gpu=False, ttft_slo=TTFT_SLO_S),
+        cluster_cfg=ClusterConfig(allow_shift=True), seed=7,
+        admission=admission, telemetry=telemetry)
+    fm = FleetManager(cs, FleetConfig())
+    det = None
+    if arm == "failsafe":
+        det = HeartbeatDetector(fm, HeartbeatConfig())
+        det.start()
+    ch = ChaosEngine(fm, ChaosConfig(seed=seed))
+    f = fault_schedule(fast)
+    # data-plane faults: identical in every arm
+    ch.schedule_surge(f["t_surge"], f["n_surge"], qps=f["surge_qps"],
+                      input_tokens=4096, output_tokens=256,
+                      ttft_slo=TTFT_SLO_S, tpot_slo=TPOT_SLO_S)
+    if arm == "failsafe":
+        # physical death: recovery waits on the heartbeat detector
+        ch.schedule_node_death(f["t_death"], DEAD_NODE)
+    else:
+        # oracle detection: the fleet knows the instant it happens
+        ch.schedule_rack_failure(f["t_death"], [DEAD_NODE])
+    fm.schedule_join(f["t_rejoin"], DEAD_NODE)
+    # control-plane faults: only the non-oracle arms
+    if arm != "oracle":
+        ch.schedule_telemetry_freeze(f["t_freeze"], f["freeze_dur"])
+        ch.schedule_controller_crash(f["t_crash"], f["crash_dur"])
+    s = cs.run(baseline(fast, seed))
+    # facility invariant over the whole run, headless windows included:
+    # committed node budgets never exceed the nameplate facility budget
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (arm, t, total)
+    assert all(np.isfinite(r.energy_j) and r.energy_j >= 0
+               for r in cs.records), "every record must carry finite joules"
+    if arm != "oracle":
+        kinds = [k for _, k, _ in cs.crash_trace]
+        assert kinds == ["crash", "restart"], (arm, cs.crash_trace)
+        assert cs.hold_trace, \
+            f"{arm}: the freeze must trip the staleness bound"
+    if arm == "failsafe":
+        trans = [k for _, nid, k in det.trace if nid == DEAD_NODE]
+        assert trans[:2] == ["suspected", "dead"], det.trace
+        churn = [k for _, k, nid in fm.churn_trace if nid == DEAD_NODE]
+        assert "dead_detected" in churn, fm.churn_trace
+    return cs, fm, s
+
+
+def fingerprint(cs):
+    """Per-request record tuple set — the bit-identity gate."""
+    return [(r.rid, r.arrival, r.prefill_done, r.finish, r.energy_j,
+             r.shed_t) for r in cs.records]
+
+
+def sweep(fast: bool, seed: int = 3):
+    rows = []
+    att = {}
+    for arm in ("oracle", "naive", "failsafe"):
+        cs, fm, s = _run(arm, fast, seed)
+        att[arm] = s.slo_attainment
+        rows.append({
+            "arm": arm,
+            "slo_attainment": s.slo_attainment,
+            "goodput_rps": s.goodput_rps,
+            "p90_ttft_s": s.p90_ttft, "p90_tpot_s": s.p90_tpot,
+            "n_shed": s.n_shed, "shed_energy_j": s.shed_energy_j,
+            "total_energy_j": s.total_energy_j,
+            "energy_per_good_token_j": s.energy_per_good_token_j,
+            "stale_holds": len(cs.hold_trace),
+            "fenced_grants": len(cs.fence_trace),
+            "crash": [(round(t, 2), k, e) for t, k, e in cs.crash_trace],
+            "churn": [(round(t, 2), k, nid)
+                      for t, k, nid in fm.churn_trace],
+        })
+        print(f"{arm:9s} att={s.slo_attainment*100:5.1f}%  "
+              f"TTFT p90 {s.p90_ttft:5.2f}s  "
+              f"goodput {s.goodput_rps:5.2f} req/s  "
+              f"shed={s.n_shed} holds={len(cs.hold_trace)} "
+              f"fenced={len(cs.fence_trace)}")
+    gain = att["failsafe"] - att["naive"]
+    print(f"\nfailsafe vs naive under the identical fault schedule: "
+          f"{att['failsafe']*100:.1f}% vs {att['naive']*100:.1f}% "
+          f"(+{gain*100:.1f}pp; oracle upper bound "
+          f"{att['oracle']*100:.1f}%)")
+    assert att["failsafe"] >= att["naive"], \
+        "staleness holds + headless shedding + heartbeat detection must " \
+        "not lose to controllers blindly acting on frozen state"
+    # determinism gate: same arm, same seed, bit-identical records
+    cs_a, _, _ = _run("failsafe", fast, seed)
+    cs_b, _, _ = _run("failsafe", fast, seed)
+    assert fingerprint(cs_a) == fingerprint(cs_b), \
+        "control-plane chaos runs must be bit-identical per seed"
+    print("rerun determinism: bit-identical per-request records  OK")
+    return rows
+
+
+def main(fast: bool = False, seed: int = 3):
+    tm = Timer().start()
+    rows = sweep(fast, seed)
+    save_artifact("fig14_control_chaos", {"sweep": rows, "seed": seed},
+                  timer=tm.stop())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

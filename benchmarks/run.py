@@ -22,6 +22,7 @@ Targets (the README's figure-reproduction table is generated from these):
     fig11fleet    elastic fleet under diurnal load and node churn
     fig12autoscale predictive autoscaling on a price/carbon tariff
     fig13chaos    chaos replay: graceful degradation vs naive handling
+    fig14control  control-plane chaos: fail-safe vs oracle vs naive control
     simperf       simulator event-throughput benchmark (perf gate)
     roofline      per-(arch x shape) roofline table from dry-run artifacts
     kernels       interpret-mode Pallas kernel microbenchmarks vs jnp oracles
@@ -36,7 +37,7 @@ import traceback
 
 SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
           "fig10hetero", "fig11fleet", "fig12autoscale", "fig13chaos",
-          "simperf", "roofline", "kernels", "beyond")
+          "fig14control", "simperf", "roofline", "kernels", "beyond")
 
 # one-liners for --list / unknown-target help, same order as SUITES
 DESCRIPTIONS = {
@@ -50,6 +51,7 @@ DESCRIPTIONS = {
     "fig11fleet": "elastic fleet under diurnal load and node churn",
     "fig12autoscale": "predictive autoscaling on a price/carbon tariff",
     "fig13chaos": "chaos replay: graceful degradation vs naive handling",
+    "fig14control": "control-plane chaos: fail-safe vs oracle vs naive control",
     "simperf": "simulator event-throughput benchmark (perf gate)",
     "roofline": "per-(arch x shape) roofline table from dry-run artifacts",
     "kernels": "interpret-mode Pallas kernel microbenchmarks vs jnp oracles",
@@ -73,6 +75,10 @@ def main() -> None:
                     help="print available targets and exit")
     ap.add_argument("--only", default=None,
                     help="comma-separated target subset (see --list)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="fault-schedule seed for the chaos targets "
+                         "(fig13chaos, fig14control); default: each "
+                         "module's built-in seed")
     args = ap.parse_args()
     if args.list:
         print_targets()
@@ -89,7 +95,8 @@ def main() -> None:
                             fig8_dynamic, fig9_cluster_scaling,
                             fig10_hetero_dyngpu, fig11_elastic_fleet,
                             fig12_autoscale_tariff, fig13_chaos,
-                            kernels_bench, roofline, sim_throughput)
+                            fig14_control_chaos, kernels_bench, roofline,
+                            sim_throughput)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
@@ -97,6 +104,7 @@ def main() -> None:
         "fig10hetero": fig10_hetero_dyngpu,
         "fig11fleet": fig11_elastic_fleet,
         "fig12autoscale": fig12_autoscale_tariff, "fig13chaos": fig13_chaos,
+        "fig14control": fig14_control_chaos,
         "simperf": sim_throughput,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
@@ -111,6 +119,9 @@ def main() -> None:
         try:
             kw = {"fleet": True} if (args.fleet and name == "fig9cluster") \
                 else {}
+            if args.seed is not None and name in ("fig13chaos",
+                                                  "fig14control"):
+                kw["seed"] = args.seed
             out = mods[name].main(fast=args.fast, **kw)
             n = len(out) if hasattr(out, "__len__") else 1
             results.append((name, time.perf_counter() - t0, n))

@@ -1,0 +1,105 @@
+"""Walkthrough: the control plane itself fails — frozen telemetry, a
+coordinator crash with a node death inside it, and recovery by replay.
+
+Four MI300X nodes serve a steady stream while the CONTROL plane (not the
+data plane) has a bad day, scripted by the ``ChaosEngine`` on the shared
+event loop so the whole incident replays bit-identically from its seed:
+
+* a **telemetry freeze** pins every controller's view of node load and
+  power to last-known-good; the coordinator and autoscaler notice the
+  staleness bound tripping and HOLD instead of acting on fiction
+  (``cluster.hold_trace`` records every refusal);
+* a **controller crash** kills the coordinator and autoscaler for a
+  window; nodes drop to fail-safe headless mode — last-committed local
+  power caps guard-band the facility limit, and admission falls back to
+  node-local SLO-aware shedding (``router.decide_local``);
+* a **node death lands INSIDE the crash window**, and nobody gets an
+  oracle notification: the ``HeartbeatDetector`` walks the node through
+  alive -> suspected -> dead on heartbeat age alone, releasing the
+  corpse's watts and requeueing its stranded work at DETECTION time;
+* the **restart** bumps the controller epoch (in-flight budget grants
+  issued by the dead incarnation are fenced, never committed), rebuilds
+  the autoscaler's forecaster from its latest snapshot + journal replay,
+  and re-levels the fleet's watts in one facility pass.
+
+Run:  PYTHONPATH=src python examples/serve_control_chaos.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.chaos import ChaosConfig, ChaosEngine
+from repro.core.cluster import AdmissionConfig, ClusterConfig, ClusterSimulator
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.simulator import Workload
+from repro.core.telemetry import (HeartbeatConfig, HeartbeatDetector,
+                                  TelemetryConfig)
+
+
+def main():
+    cfg = get_config("llama31_8b")
+    cluster = ClusterSimulator(
+        cfg, policy_4p4d(500), n_nodes=4,
+        node_budget_w=4000.0,              # deliberately power-constrained
+        ctrl_cfg=ControllerConfig(ttft_slo=2.0, allow_power=True,
+                                  allow_gpu=False),
+        cluster_cfg=ClusterConfig(allow_shift=True), seed=7,
+        admission=AdmissionConfig(slo_aware=True),
+        telemetry=TelemetryConfig(),       # hold past max_staleness_s
+    )
+    fleet = FleetManager(cluster, FleetConfig())
+    detector = HeartbeatDetector(fleet, HeartbeatConfig())
+    detector.start()
+    chaos = ChaosEngine(fleet, ChaosConfig(seed=7))
+    print(f"facility budget: {cluster.facility_budget_w:.0f} W "
+          f"({len(cluster.nodes)} nodes x 4000 W); heartbeat timeouts: "
+          f"suspect {detector.cfg.suspect_after_s}s / "
+          f"dead {detector.cfg.dead_after_s}s")
+
+    chaos.schedule_telemetry_freeze(5.0, 6.0)
+    chaos.schedule_controller_crash(14.0, 8.0)
+    chaos.schedule_surge(15.0, n=60, qps=30.0, input_tokens=4096,
+                         output_tokens=256, ttft_slo=2.0, tpot_slo=0.040)
+    chaos.schedule_node_death(16.0, 3)     # inside the headless window
+    fleet.schedule_join(28.0, 3)
+
+    t = Workload.poisson_arrivals(240, 8.0, np.random.default_rng(1))
+    wl = Workload([(float(ti), 4096, 256, 2.0, 0.040) for ti in t],
+                  name="steady")
+    summary = cluster.run(wl)
+
+    print("\nchaos script (as scheduled):")
+    for t0, kind, detail in chaos.trace:
+        print(f"  t={t0:6.2f}s  {kind:18s} {detail}")
+    print("\nstaleness holds during the freeze "
+          f"({len(cluster.hold_trace)} total):")
+    for t0, why, stale_s in cluster.hold_trace[:4]:
+        print(f"  t={t0:6.2f}s  coordinator held ({why}, view "
+              f"{stale_s:.2f}s old)")
+    print("\ncontroller epoch ladder:")
+    for t0, kind, epoch in cluster.crash_trace:
+        print(f"  t={t0:6.2f}s  {kind:8s} epoch {epoch}")
+    print(f"  fenced budget grants from dead epochs: "
+          f"{len(cluster.fence_trace)}")
+    print("\nheartbeat detector on node 3 (death was silent):")
+    for t0, nid, kind in detector.trace:
+        if nid == 3:
+            print(f"  t={t0:6.2f}s  node {nid} -> {kind}")
+    detected = [t0 for t0, kind, nid in fleet.churn_trace
+                if kind == "dead_detected" and nid == 3]
+    if detected:
+        print(f"  stranded work requeued at detection (t={detected[0]:.2f}s,"
+              f" {detected[0] - 16.0:.2f}s after the death itself)")
+    shed = [r for r in cluster.records if r.shed_t is not None]
+    print(f"\nheadless admission: shed {len(shed)} requests "
+          f"({summary.shed_energy_j:.0f} J already burned on them)")
+
+    print(f"\nfleet: {summary.row()}")
+    for nd in cluster.nodes:
+        state = "up" if nd.pm.powered else "down"
+        print(f"  node {nd.node_id}: {state:4s} budget {nd.pm.budget:6.0f} W "
+              f"roles {''.join(g.role[0].upper() for g in nd.gpus)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
 """simcheck CLI: ``python -m repro.analysis.check src/``.
 
 Exit status: 0 when every finding is either absent or suppressed by the
-baseline; 1 when new findings exist (CI fails on new findings only, so
-the baseline is the explicit, reviewable debt list).
+baseline; 1 when new findings exist OR the baseline carries stale
+entries (debt that no longer exists must be deleted, or the baseline
+rots into a list nobody trusts). ``--allow-stale`` downgrades stale
+entries back to warnings for mid-refactor runs.
 
 ``--docstrings`` switches to a documentation-coverage gate (the prose
 sibling of RC005's annotation rule): every public module, class,
@@ -84,6 +86,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from the current findings "
                          "(entries still need human justification)")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="stale baseline entries warn instead of failing "
+                         "(escape hatch for mid-refactor runs)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="suppress the summary line")
     ap.add_argument("--docstrings", action="store_true",
@@ -113,7 +118,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"simcheck: {n_files} files, {len(new)} new finding(s), "
               f"{len(suppressed)} baselined, {len(stale)} stale baseline "
               f"entr{'y' if len(stale) == 1 else 'ies'}")
-    return 1 if new else 0
+    return 1 if new or (stale and not args.allow_stale) else 0
 
 
 if __name__ == "__main__":

@@ -113,7 +113,7 @@ TIME_RETURNING = frozenset({"shift", "shrink_budget", "emergency_shrink",
 
 # RC006: fault-injection hooks that only core/chaos.py may install (any
 # non-None write outside it), plus the engine class itself.
-FAULT_HOOK_ATTRS = frozenset({"link_fault_fn"})
+FAULT_HOOK_ATTRS = frozenset({"link_fault_fn", "telemetry_fault_fn"})
 CHAOS_CLASSES = frozenset({"ChaosEngine"})
 
 # RC003: names that smell like per-iteration float quantities (times,

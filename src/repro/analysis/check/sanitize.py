@@ -82,6 +82,8 @@ class InvariantSanitizer:
         self._last_t = 0.0
         self._power_sum_w = 0.0
         self._energy_int_j = 0.0
+        # epoch-fence audit: grant_trace entries already validated
+        self._grants_seen = 0
 
     # ---------------- registration ----------------
     def attach_cluster(self, cluster: Any) -> None:
@@ -124,6 +126,7 @@ class InvariantSanitizer:
         self._check_power_hierarchy(nodes)
         self._check_residency(nodes)
         self._check_energy(nodes)
+        self._check_epoch_fence()
         self._power_sum_w = sum(
             max(c, e)
             for nd in nodes for c, e in zip(nd.pm.commanded, nd.pm.effective))
@@ -184,6 +187,24 @@ class InvariantSanitizer:
                     f"{self.cluster.facility_limit_w:.3f} W in force but "
                     f"promised node budgets sum to {promised:.3f} W "
                     f"(floor allowance {floors:.3f} W)")
+        # headless window (controller crash): each node locally enforces
+        # its last-committed caps, guard-banded — promised budgets
+        # (in-flight shrinks at their targets) must still fit under the
+        # facility's effective limit with nobody coordinating, because a
+        # dead controller cannot be mid-grant
+        if (self.cluster is not None
+                and getattr(self.cluster, "controller_down", False)):
+            promised = sum(nd.pm._usable_budget() for nd in nodes
+                           if nd.pm.powered)
+            floors = sum(nd.pm.budget_floor_w for nd in nodes
+                         if nd.pm.powered)
+            limit = max(self.cluster.facility_limit_w, floors)
+            if promised > limit + EPS_W:
+                raise InvariantViolation(
+                    f"power: headless window (controller down) but promised "
+                    f"node budgets sum to {promised:.3f} W above the "
+                    f"facility limit {self.cluster.facility_limit_w:.3f} W "
+                    f"(floor allowance {floors:.3f} W)")
 
     # ---------------- invariant: KV single-residency ----------------
     def _check_residency(self, nodes: List[Any]) -> None:
@@ -234,6 +255,31 @@ class InvariantSanitizer:
                 f"residency: request rid={req.rid} sits in node "
                 f"{nd.node_id} GPU {gpu.gid}'s decode pool but claims "
                 f"decode_gpu={req.decode_gpu}")
+
+    # ---------------- invariant: epoch-fenced grants ----------------
+    def _check_epoch_fence(self) -> None:
+        """No budget grant may commit against a dead controller epoch: a
+        ``grant_trace`` entry must carry the current epoch and must not
+        land while the controller is down — such grants belong in
+        ``fence_trace`` (the source's shrink commits, the watts do not
+        move). Incremental read-only scan of the cluster's trace."""
+        cl = self.cluster
+        if cl is None:
+            return
+        trace = getattr(cl, "grant_trace", None)
+        if trace is None:
+            return
+        for i in range(self._grants_seen, len(trace)):
+            t, src, dst, watts, epoch_issued, epoch_now, down = trace[i]
+            if epoch_issued != epoch_now or down:
+                raise InvariantViolation(
+                    f"epoch fence: budget grant of {watts:.3f} W "
+                    f"(node {src} -> node {dst} at t={t:.3f}) committed "
+                    f"against epoch {epoch_issued} while the controller is "
+                    f"at epoch {epoch_now}"
+                    f"{' and DOWN' if down else ''} — grants must not "
+                    f"commit across a controller crash")
+        self._grants_seen = len(trace)
 
     # ---------------- invariant: energy conservation ----------------
     def _records(self) -> List[Any]:

@@ -60,6 +60,7 @@ import numpy as np
 from repro.core.cluster import ClusterSimulator
 from repro.core.fleet import FleetManager
 from repro.core.simulator import NodeSimulator
+from repro.core.telemetry import ControlJournal
 
 J_PER_KWH = 3.6e6
 
@@ -238,6 +239,28 @@ class ArrivalForecaster:
                 if horizon_s > 0 else max(level, 0.0)
         return max(level + trend * horizon_s, 0.0)
 
+    def state(self, now: float) -> tuple:
+        """Canonical snapshot of the forecaster at ``now``. Buckets roll
+        to ``now`` first, so two forecasters fed identical arrivals report
+        identical state regardless of when each last rolled — the tuple is
+        the golden recovery test's bit-identity gate, and what
+        ``ControlJournal`` snapshots persist."""
+        self._roll(int(now / self.bucket_s))
+        return (tuple(self._buckets), self._cur_idx, self._cur_count,
+                tuple(sorted(self._season.items())),
+                self._tok_sum, self._tok_n)
+
+    def load_state(self, state: tuple) -> None:
+        """Restore a snapshot produced by ``state`` (controller restart:
+        the recovery protocol loads this, then replays the journal)."""
+        buckets, cur_idx, cur_count, season, tok_sum, tok_n = state
+        self._buckets = list(buckets)
+        self._cur_idx = cur_idx
+        self._cur_count = cur_count
+        self._season = dict(season)
+        self._tok_sum = tok_sum
+        self._tok_n = tok_n
+
 
 @dataclasses.dataclass
 class AutoscaleConfig:
@@ -303,9 +326,20 @@ class PredictiveAutoscaler:
         self.decision_trace: List[tuple] = []
         self.signal_trace: List[tuple] = []   # (t, demand, capacity, price)
         self.loop.subscribe("arrival", self._on_arrival)
+        # crash-recoverable coordination: the journal is the durable WAL
+        # (it records arrivals even while the controller process is down);
+        # each up-tick checkpoints controller state against it, and a
+        # controller restart rebuilds from snapshot + replay
+        self.journal = ControlJournal(self.loop)
+        self.loop.subscribe("controller_restart", self._on_controller_restart)
 
     # ---------------- signals ----------------
     def _on_arrival(self, payload: object) -> None:
+        if self.cs.controller_down:
+            # the controller process is dead: it observes nothing. The
+            # journal (durable, out-of-process) still records the arrival,
+            # so recovery replays exactly what was missed.
+            return
         rec = payload.rec if hasattr(payload, "rec") else payload
         self.forecaster.observe(self.loop.now, rec.input_tokens)
 
@@ -316,9 +350,14 @@ class PredictiveAutoscaler:
 
     def capacity_rps(self, nodes: Sequence[NodeSimulator]) -> float:
         """Aggregate prefill capacity of ``nodes`` in requests/s, at their
-        *current* caps and the trailing mean prompt length."""
+        *current* caps and the trailing mean prompt length. Read through
+        the telemetry bus: a frozen pipeline serves last-known-good
+        capacity, and the staleness hold in ``_tick`` decides whether the
+        view is still actionable."""
         toks = self.forecaster.mean_input_tokens()
-        return sum(nd.prefill_capacity_tps() for nd in nodes) / max(toks, 1.0)
+        tb = self.cs.telemetry
+        return sum(tb.prefill_capacity_tps(nd)
+                   for nd in nodes) / max(toks, 1.0)
 
     def demand_rps(self) -> float:
         """Demand signal per the configured mode: look-ahead forecast for
@@ -348,7 +387,7 @@ class PredictiveAutoscaler:
         eff = (1e18 if s.total_energy_j > 0 and s.n_good == 0
                else s.energy_per_good_token_j)
         toks = self.forecaster.mean_input_tokens()
-        marginal = nd.marginal_joules_per_token(int(toks), 256)
+        marginal = self.cs.telemetry.marginal_jpt(nd, int(toks), 256)
         if not math.isfinite(marginal):
             marginal = 1e18
         # price-weight the prospective signal: at $0 the tie-break is pure
@@ -365,10 +404,15 @@ class PredictiveAutoscaler:
         assert kind == "autoscale", kind
         # same discipline as fleet/cluster events: this tick reads
         # cross-node state (capacities, trailing summaries), so macro
-        # iterations materialize first and plans revalidate afterwards
-        self.cs.sync_all()
-        self._tick()
-        self.cs.validate_all()
+        # iterations materialize first and plans revalidate afterwards.
+        # While the controller is crashed nothing decides and nothing
+        # checkpoints, but the tick keeps re-arming so the restarted
+        # controller resumes on schedule.
+        if not self.cs.controller_down:
+            self.cs.sync_all()
+            self._tick()
+            self.journal.snapshot(self._control_state())
+            self.cs.validate_all()
         if self.loop.heap:
             self.loop.push(self.loop.now + self.cfg.period_s, self._handle,
                            "autoscale")
@@ -391,6 +435,15 @@ class PredictiveAutoscaler:
             # fleet that is busy force-throttling. Hold until it clears.
             self.decision_trace.append(
                 (now, "emergency_hold", -1, demand, cap, price))
+            return
+        tb = self.cs.telemetry
+        stale_s = tb.max_staleness(live)
+        if stale_s > tb.cfg.max_staleness_s and not tb.cfg.act_on_stale:
+            # capacity views older than the staleness bound: joining or
+            # draining against a frozen pipeline is guessing — hold on
+            # last-known-good membership until telemetry recovers
+            self.decision_trace.append(
+                (now, "stale_hold", -1, demand, cap, price))
             return
         if self.forecaster.closed_buckets() < self.cfg.warmup_buckets:
             return                 # level/trend over <N buckets is noise
@@ -429,3 +482,40 @@ class PredictiveAutoscaler:
         self._last_action_t = now
         self.decision_trace.append(
             (now, "leave", victim.node_id, demand, shrunk_cap, price))
+
+    # ---------------- crash recovery ----------------
+    def _control_state(self) -> tuple:
+        """The controller state a restart must reproduce: the forecaster
+        snapshot plus the action cooldown clock."""
+        return (self.forecaster.state(self.loop.now), self._last_action_t)
+
+    def _rebuild(self) -> Tuple[ArrivalForecaster, float]:
+        """Reconstruct controller state from the last durable snapshot
+        plus a replay of the journal entries recorded after it — the
+        recovery protocol, exposed separately so the golden test can
+        compare a rebuild against a live uncrashed controller bit for
+        bit. Deterministic: forecaster state is a pure function of the
+        observation stream, and snapshot + replay reproduces the stream
+        exactly."""
+        f = ArrivalForecaster(bucket_s=self.cfg.bucket_s,
+                              window_s=self.cfg.window_s,
+                              season_s=self.cfg.season_s)
+        last_action = -math.inf
+        n = 0
+        snap = self.journal.latest()
+        if snap is not None:
+            _t, n, (fstate, last_action) = snap
+            f.load_state(fstate)
+        for (t, toks) in self.journal.replay_from(n):
+            f.observe(t, toks)
+        return f, last_action
+
+    def _on_controller_restart(self, payload: object) -> None:
+        """Crash recovery (published by ``FleetManager`` at the restart
+        instant): rebuild the forecaster and cooldown clock; the next
+        periodic tick decides on the rebuilt state."""
+        f, last_action = self._rebuild()
+        self.forecaster = f
+        self._last_action_t = last_action
+        self.decision_trace.append(
+            (self.loop.now, "recovered", -1, 0.0, 0.0, self.price_now()))

@@ -77,8 +77,12 @@ class ChaosEngine:
         self.trace: List[tuple] = []     # (t_scheduled, kind, detail)
         # per-node link fault windows: node_id -> [(t0, t1, mode)]
         self._link_down: dict = {}
-        # the one sanctioned injection point (simcheck RC006)
+        # telemetry degradation windows: (t0, t1, mode, node_ids|None)
+        # where mode is "freeze" | "drop" | ("sample", period_s)
+        self._tel_windows: List[tuple] = []
+        # the sanctioned injection points (simcheck RC006)
         fleet.link_fault_fn = self._link_fault
+        fleet.cs.telemetry.telemetry_fault_fn = self._telemetry_fault
 
     # ---------------- scenario scheduling ----------------
     def schedule_power_emergency(self, t: float, frac: float,
@@ -105,6 +109,64 @@ class ChaosEngine:
         self._link_down.setdefault(node_id, []).append(
             (t, t + duration_s, mode))
         self._link_down[node_id].sort()
+
+    def schedule_telemetry_freeze(self, t: float, duration_s: float,
+                                  node_ids: Optional[Sequence[int]] = None
+                                  ) -> None:
+        """Telemetry pipeline wedges over ``[t, t + duration_s)``: every
+        controller read of the listed nodes (all nodes if ``None``) serves
+        the last-known-good snapshot, and staleness grows for the window.
+        Heartbeats still flow — this is the collector, not the network."""
+        self.trace.append((t, "telemetry_freeze", (duration_s, node_ids)))
+        self._tel_windows.append(
+            (t, t + duration_s, "freeze",
+             frozenset(node_ids) if node_ids is not None else None))
+        self._tel_windows.sort(key=lambda w: (w[0], w[1]))
+
+    def schedule_telemetry_dropout(self, t: float, duration_s: float,
+                                   node_ids: Optional[Sequence[int]] = None
+                                   ) -> None:
+        """Telemetry path partitions over ``[t, t + duration_s)``: state
+        reads freeze AND the listed nodes' heartbeats are swallowed — the
+        failure detector may falsely suspect healthy nodes (and, past its
+        dead timeout, fence them)."""
+        self.trace.append((t, "telemetry_dropout", (duration_s, node_ids)))
+        self._tel_windows.append(
+            (t, t + duration_s, "drop",
+             frozenset(node_ids) if node_ids is not None else None))
+        self._tel_windows.sort(key=lambda w: (w[0], w[1]))
+
+    def schedule_telemetry_period(self, t: float, duration_s: float,
+                                  period_s: float,
+                                  node_ids: Optional[Sequence[int]] = None
+                                  ) -> None:
+        """Coarse sample-and-hold telemetry over ``[t, t + duration_s)``:
+        reads refresh at most once per ``period_s``, bounding staleness by
+        the period (an honest but slow pipeline)."""
+        self.trace.append((t, "telemetry_period", (duration_s, period_s)))
+        self._tel_windows.append(
+            (t, t + duration_s, ("sample", period_s),
+             frozenset(node_ids) if node_ids is not None else None))
+        self._tel_windows.sort(key=lambda w: (w[0], w[1]))
+
+    def schedule_controller_crash(self, t: float,
+                                  duration_s: float) -> None:
+        """Coordinator + autoscaler crash for ``duration_s``: headless
+        fail-safe mode, epoch-fenced grants, snapshot+replay recovery
+        (see ``FleetManager.schedule_controller_crash``)."""
+        self.trace.append((t, "controller_crash", duration_s))
+        self.fm.schedule_controller_crash(t, duration_s)
+
+    def schedule_node_death(self, t: float, node_id: int) -> None:
+        """Physical node death WITHOUT oracle detection: recovery is gated
+        on the heartbeat detector noticing (``FleetManager.schedule_die``).
+        Requires a ``HeartbeatDetector`` attached to the fleet — without
+        one the stranded work never requeues."""
+        assert self.fm.detector is not None, \
+            "schedule_node_death needs a HeartbeatDetector on the fleet " \
+            "(use schedule_rack_failure for oracle-detected deaths)"
+        self.trace.append((t, "node_death", node_id))
+        self.fm.schedule_die(t, node_id)
 
     def schedule_surge(self, t: float, n: int, qps: float,
                        input_tokens: int = 512, output_tokens: int = 128,
@@ -160,7 +222,27 @@ class ChaosEngine:
             mode = "fail" if self.rng.random() < 0.5 else "stall"
             self.schedule_link_fault(t0, nid, link_fault_s, mode)
 
-    # ---------------- runtime fault hook ----------------
+    # ---------------- runtime fault hooks ----------------
+    def _telemetry_fault(self, node_id: int, now: float):
+        """Deterministic telemetry verdict for one (node, now) read:
+        ``None`` (clean), ``"freeze"``, ``"drop"`` or
+        ``("sample", period_s)``. Pure function of the pre-built window
+        list; overlapping windows: the harshest mode wins (drop > freeze
+        > sampled)."""
+        verdict = None
+        for (t0, t1, mode, nids) in self._tel_windows:
+            if not (t0 <= now < t1):
+                continue
+            if nids is not None and node_id not in nids:
+                continue
+            if mode == "drop":
+                return "drop"
+            if mode == "freeze":
+                verdict = "freeze"
+            elif verdict is None:
+                verdict = mode
+        return verdict
+
     def _link_fault(self, src_id: int, t_start: float,
                     dt: float) -> Optional[Tuple[str, float]]:
         """Deterministic link verdict for a transfer occupying

@@ -45,6 +45,7 @@ from repro.core.goodput import (EnergySignal, GoodputSummary, RequestRecord,
                                 summarize)
 from repro.core.power_model import PowerModel
 from repro.core.simulator import NodeSimulator, SimRequest, Workload
+from repro.core.telemetry import TelemetryBus, TelemetryConfig
 
 
 @dataclasses.dataclass
@@ -126,6 +127,11 @@ class PowerAwareRouter:
         self.policy = policy
         self.price_fn = price_fn
         self.adm = admission or AdmissionConfig()
+        # telemetry bus (set by ClusterSimulator): when present, all node
+        # state reads go through it — sampled/degradable views instead of
+        # omniscient direct reads. A fresh bus read is bit-identical to
+        # the direct call, so standalone routers (no bus) behave the same.
+        self.telemetry: Optional[TelemetryBus] = None
         self._rr = 0
         self.trace: List[tuple] = []    # (t, node_id)
         self.shed_trace: List[tuple] = []   # (t, rid, projected_ttft)
@@ -139,6 +145,18 @@ class PowerAwareRouter:
             return 1.0
         return max(self.price_fn(node_id, now), 0.0)
 
+    def _load(self, nd: NodeSimulator, extra: int) -> float:
+        """Node load signal through the telemetry bus when one is wired
+        (fresh reads are bit-identical to the direct call)."""
+        tb = self.telemetry
+        return nd.router_load(extra) if tb is None else tb.router_load(
+            nd, extra)
+
+    def _jpt(self, nd: NodeSimulator, in_t: int, out_t: int) -> float:
+        tb = self.telemetry
+        return (nd.marginal_joules_per_token(in_t, out_t) if tb is None
+                else tb.marginal_jpt(nd, in_t, out_t))
+
     def pick(self, now: float, nodes: Sequence[NodeSimulator],
              req: Optional[SimRequest] = None) -> NodeSimulator:
         k = self._rr % len(nodes)
@@ -150,20 +168,20 @@ class PowerAwareRouter:
             if self.policy == "cost":
                 slo = req.rec.ttft_slo if req is not None else 1.0
                 fits = [nd for nd in order
-                        if nd.router_load(extra) <= 0.5 * slo]
+                        if self._load(nd, extra) <= 0.5 * slo]
                 if fits:
                     node = min(fits, key=lambda nd: (
-                        nd.marginal_joules_per_token(extra, out)
+                        self._jpt(nd, extra, out)
                         * self._price(nd.node_id, now),
-                        nd.router_load(extra)))
+                        self._load(nd, extra)))
                 else:
-                    node = min(order, key=lambda nd: nd.router_load(extra))
+                    node = min(order, key=lambda nd: self._load(nd, extra))
             else:
                 node = min(order, key=lambda nd: (
-                    nd.marginal_joules_per_token(extra, out),
-                    nd.router_load(extra)))
+                    self._jpt(nd, extra, out),
+                    self._load(nd, extra)))
         else:
-            node = min(order, key=lambda nd: nd.router_load(extra))
+            node = min(order, key=lambda nd: self._load(nd, extra))
         self.trace.append((now, node.node_id))
         return node
 
@@ -185,7 +203,7 @@ class PowerAwareRouter:
         if not self.adm.slo_aware:
             return "admit", self.pick(now, nodes, req)
         extra = req.rec.input_tokens
-        best = min(nd.router_load(extra) for nd in nodes)
+        best = min(self._load(nd, extra) for nd in nodes)
         if not (best < float("inf")):
             # every candidate momentarily unroutable (all draining): hold
             self.defer_trace.append((now, req.rid))
@@ -199,6 +217,43 @@ class PowerAwareRouter:
             self._val_sum += dens
             self._val_n += 1
             return "admit", self.pick(now, nodes, req)
+        mean = self._val_sum / self._val_n if self._val_n else dens
+        value = min(max(dens / max(mean, 1e-9), self.adm.value_floor),
+                    self.adm.value_ceil)
+        if proj > self.adm.shed_frac * slo * value:
+            self.shed_trace.append((now, req.rid, proj))
+            return "shed", None
+        self.defer_trace.append((now, req.rid))
+        return "defer", None
+
+    def decide_local(self, now: float, nodes: Sequence[NodeSimulator],
+                     req: SimRequest
+                     ) -> "tuple[str, Optional[NodeSimulator]]":
+        """Headless fallback admission (controller crash window): no
+        fleet-wide best-node scan — that ranking is the dead controller's
+        job. Round-robin a node, then admit/defer/shed by that node's OWN
+        live queue state, a purely local signal every node has without
+        telemetry. Same thresholds and value-density bias as ``decide``,
+        so shedding stays SLO-aware while headless; with admission control
+        off this admits everything, like ``decide`` does."""
+        k = self._rr % len(nodes)
+        self._rr += 1
+        node = nodes[k]
+        if not self.adm.slo_aware:
+            self.trace.append((now, node.node_id))
+            return "admit", node
+        load = node.router_load(req.rec.input_tokens)
+        if not (load < float("inf")):
+            self.defer_trace.append((now, req.rid))
+            return "defer", None
+        proj = (now - req.rec.arrival) + load
+        slo = req.rec.ttft_slo
+        dens = self._density(req)
+        if proj <= self.adm.defer_frac * slo:
+            self._val_sum += dens
+            self._val_n += 1
+            self.trace.append((now, node.node_id))
+            return "admit", node
         mean = self._val_sum / self._val_n if self._val_n else dens
         value = min(max(dens / max(mean, 1e-9), self.adm.value_floor),
                     self.adm.value_ceil)
@@ -225,7 +280,8 @@ class ClusterSimulator:
                  powers: Optional[Sequence[PowerModel]] = None,
                  fidelity: str = "macro", router_policy: str = "capacity",
                  sanitize: Optional[bool] = None,
-                 admission: Optional[AdmissionConfig] = None):
+                 admission: Optional[AdmissionConfig] = None,
+                 telemetry: Optional[TelemetryConfig] = None):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
         resolves from the node's spec). When ``node_budgets`` is omitted,
@@ -238,7 +294,10 @@ class ClusterSimulator:
         ``sanitize``: validate core invariants at every dispatch
         (default: the ``RAPID_SANITIZE`` environment variable).
         ``admission``: SLO-aware admission control / load shedding at the
-        router front door (default off — see ``AdmissionConfig``)."""
+        router front door (default off — see ``AdmissionConfig``).
+        ``telemetry``: staleness bounds for the control-plane telemetry
+        bus (see ``core.telemetry.TelemetryConfig``; the default bus is a
+        bit-identical pass-through until a ``ChaosEngine`` degrades it)."""
         self.loop = EventLoop()
         if sanitize_enabled(sanitize):
             san = InvariantSanitizer()
@@ -275,6 +334,10 @@ class ClusterSimulator:
         ]
         self.fidelity = fidelity
         self.router = PowerAwareRouter(router_policy, admission=admission)
+        # every controller on this cluster reads node state through the
+        # bus; the chaos engine is the only writer of its fault hook
+        self.telemetry = TelemetryBus(self, telemetry)
+        self.router.telemetry = self.telemetry
         self.ccfg = cluster_cfg or ClusterConfig()
         self.records: List[RequestRecord] = []
         self.shift_trace: List[tuple] = []    # (t, src, dst, watts)
@@ -290,6 +353,20 @@ class ClusterSimulator:
         # redistribution in flight pauses coordinator budget ops
         self.active: List[bool] = [True] * n_nodes
         self.churn_inflight = False
+        # control-plane fault tolerance (core.telemetry / core.fleet):
+        # while a scheduled controller crash window is open the cluster
+        # runs headless — local admission, no coordinator decisions, and
+        # every budget grant epoch-fenced. The epoch bumps at each restart
+        # so grants issued by a dead incarnation cannot commit.
+        self.controller_down = False
+        self.controller_epoch = 0
+        self.crash_trace: List[tuple] = []   # (t, "crash"|"restart", epoch)
+        self.hold_trace: List[tuple] = []    # (t, reason, staleness_s)
+        # committed grants: (t, src, dst, watts, epoch_issued, epoch_now,
+        # controller_down) — the sanitizer audits the last two fields
+        self.grant_trace: List[tuple] = []
+        self.fence_trace: List[tuple] = []   # (t, src, dst, freed, epoch)
+        self._ctrl_snapshot: Optional[tuple] = None
         # tariff inputs (set by core.autoscale, or directly): when present,
         # the summary prices spent joules into $/good-token and
         # gCO2/good-token alongside J/good-token
@@ -364,8 +441,9 @@ class ClusterSimulator:
             if node_id is not None:
                 node = self.nodes[node_id]   # pinned traffic bypasses
             else:                            # admission control
-                verdict, picked = self.router.decide(
-                    now, self.active_nodes(), req)
+                decide = (self.router.decide_local if self.controller_down
+                          else self.router.decide)
+                verdict, picked = decide(now, self.active_nodes(), req)
                 if verdict == "shed":
                     self.mark_shed(req)
                     return
@@ -391,7 +469,8 @@ class ClusterSimulator:
             raise ValueError(f"unknown cluster event {kind!r}")
         self.validate_all()
 
-    def _on_budget_ready(self, src_id: int, dst_id: int, freed: float):
+    def _on_budget_ready(self, src_id: int, dst_id: int, freed: float,
+                         epoch: int = 0):
         now = self.loop.now
         src, dst = self.nodes[src_id], self.nodes[dst_id]
         self._inflight.discard(src_id)
@@ -401,6 +480,16 @@ class ClusterSimulator:
             # redistributed them at the failure instant); nothing to hand on
             return
         src.pm.commit_budget(now)
+        if epoch != self.controller_epoch or self.controller_down:
+            # epoch fence: this grant was issued by a controller incarnation
+            # that has since crashed (or the crash window is still open).
+            # Fail safe: the source's cap lowering above still commits —
+            # that is the guard band — but the freed watts are NOT granted
+            # against a dead epoch; they sit as facility headroom until the
+            # restarted controller's re-level reclaims them.
+            self.fence_trace.append((now, src_id, dst_id, freed, epoch))
+            self.assert_facility_invariant()
+            return
         # the sink takes only what still fits under the *effective* limit:
         # an emergency that slashed the facility budget after this shift
         # was scheduled (and retargeted the source's shrink to its own,
@@ -419,6 +508,9 @@ class ClusterSimulator:
             # source so facility watts are conserved
             src.pm.grow_budget(now, back)
         self.shift_trace.append((now, src_id, dst_id, absorbed))
+        self.grant_trace.append((now, src_id, dst_id, absorbed, epoch,
+                                 self.controller_epoch,
+                                 self.controller_down))
         self.assert_facility_invariant()
 
     def _eligible_sources(self, stresses: List[NodeStress],
@@ -474,8 +566,11 @@ class ClusterSimulator:
             return False
         self._inflight.update((src.node_id, dst.node_id))
         self._last_shift_t = now
+        # the grant rides with the epoch that issued it: if the controller
+        # crashes before t_ready, the fence in _on_budget_ready voids it
         self.loop.push(t_ready, self._handle, "budget_ready",
-                       (src.node_id, dst.node_id, freed))
+                       (src.node_id, dst.node_id, freed,
+                        self.controller_epoch))
         return True
 
     def _try_role_flip(self, now: float, stresses: List[NodeStress],
@@ -516,10 +611,35 @@ class ClusterSimulator:
         self.budget_trace.append(
             (now, [nd.pm.budget for nd in self.nodes], total))
         c = self.ccfg
+        if self.controller_down:
+            # headless window: the invariant probe above still records
+            # (facility conservation stays auditable while nobody decides);
+            # the tick keeps re-arming so the restarted controller resumes
+            # without a fresh kick
+            if self.loop.heap:
+                self.loop.push(now + c.period_s, self._handle,
+                               "cluster_ctrl")
+            return
+        # periodic control-state checkpoint: what restore_control rebuilds
+        # the coordinator from after a crash (the autoscaler checkpoints
+        # its own state through core.telemetry.ControlJournal)
+        self._ctrl_snapshot = (now, self._last_shift_t, self._last_flip_t)
         live = self.active_nodes()
         if (c.allow_shift or c.allow_gpu_move) and live \
                 and not self.churn_inflight and not self.emergency_hold:
-            stresses = [nd.stress_summary() for nd in live]
+            tb = self.telemetry
+            stresses = [tb.stress(nd) for nd in live]
+            stale_s = tb.max_staleness(live)
+            if stale_s > tb.cfg.max_staleness_s:
+                # the served views are older than the staleness bound:
+                # hold the power plan on last-known-good state (fail-safe)
+                # unless configured to act anyway (fig14's naive arm)
+                self.hold_trace.append((now, "stale", stale_s))
+                if not tb.cfg.act_on_stale:
+                    if self.loop.heap:
+                        self.loop.push(now + c.period_s, self._handle,
+                                       "cluster_ctrl")
+                    return
             dst = max(stresses, key=lambda s: s.stress)
             if dst.stress >= c.dst_stress_min:
                 shifted = False
@@ -533,6 +653,20 @@ class ClusterSimulator:
                     self._try_role_flip(now, stresses, dst)
         if self.loop.heap:
             self.loop.push(now + c.period_s, self._handle, "cluster_ctrl")
+
+    def restore_control(self) -> None:
+        """Rebuild coordinator state after a controller restart (the
+        recovery protocol's cluster half): restore the cooldown clocks
+        from the last periodic checkpoint — conservative, because the
+        rebuilt controller cannot fire a shift earlier than the crashed
+        one could have. Budget ops the crash orphaned need no repair
+        here: their ``budget_ready`` events still dispatch, the epoch
+        fence voids the grant, and the unconditional ``_inflight``
+        discard clears the slot."""
+        if self._ctrl_snapshot is not None:
+            _t, last_shift, last_flip = self._ctrl_snapshot
+            self._last_shift_t = last_shift
+            self._last_flip_t = last_flip
 
     # ---------------- driving ----------------
     def mark_shed(self, req: SimRequest) -> None:

@@ -181,6 +181,17 @@ class FleetManager:
         # joins dispatched but not yet activated: the autoscaler must not
         # double-join a node whose power-on handshake is still in flight
         self.pending_joins: set = set()
+        # -- control-plane fault tolerance (core.telemetry) --
+        # the heartbeat failure detector attaches itself here; without one,
+        # only the oracle fail path (schedule_fail) detects deaths
+        self.detector: Optional[object] = None
+        self._suspected: set = set()     # de-routed, KV intact
+        # physically-dead nodes the control plane has NOT detected yet:
+        # their evicted requests and released watts sit here until the
+        # failure detector's dead verdict recovers them (knowledge-gated —
+        # the fleet cannot react to a death it hasn't observed)
+        self._limbo: Dict[int, List[SimRequest]] = {}
+        self._limbo_watts: Dict[int, float] = {}
         for nd in cluster.nodes:
             nd.migrator = self._migrate_out
         released = 0.0
@@ -208,6 +219,25 @@ class FleetManager:
 
     def schedule_fail(self, t: float, node_id: int) -> None:
         self.loop.push(max(t, self.loop.now), self._handle, "fail", node_id)
+
+    def schedule_die(self, t: float, node_id: int) -> None:
+        """Physical node death WITHOUT oracle detection: the node stops
+        (KV gone, heartbeats cease, watts dark) but the fleet does NOT
+        requeue or re-level — recovery waits for the heartbeat detector's
+        dead verdict (``declare_dead``). This is the non-oracle sibling of
+        ``schedule_fail``; it requires a ``HeartbeatDetector`` or the
+        stranded work never recovers."""
+        self.loop.push(max(t, self.loop.now), self._handle, "die", node_id)
+
+    def schedule_controller_crash(self, t: float,
+                                  duration_s: float) -> None:
+        """Coordinator + autoscaler crash for ``duration_s``: the cluster
+        runs headless (local caps, local admission, epoch-fenced grants)
+        until the restart rebuilds controller state from snapshot +
+        journal replay. Overlapping crash windows coalesce into the
+        first."""
+        t0 = max(t, self.loop.now)
+        self.loop.push(t0, self._handle, "ctrl_crash", duration_s)
 
     def schedule_fail_group(self, t: float,
                             node_ids: Sequence[int]) -> None:
@@ -251,6 +281,12 @@ class FleetManager:
             self._on_fail(payload)
         elif kind == "fail_group":
             self._on_fail_group(payload)
+        elif kind == "die":
+            self._on_die(payload)
+        elif kind == "ctrl_crash":
+            self._on_ctrl_crash(payload)
+        elif kind == "ctrl_restart":
+            self._on_ctrl_restart(payload)
         elif kind == "migrate_arrive":
             self._on_migrate_arrive(payload)
         elif kind == "migrate_fail":
@@ -401,7 +437,10 @@ class FleetManager:
             return
         # re-entry goes through SLO-aware admission: a requeue storm into
         # an emergency-shrunk fleet must shed, not queue into violation
-        verdict, node = self.cs.router.decide(now, live, req)
+        # (local admission while the controller is down, like arrivals)
+        decide = (self.cs.router.decide_local if self.cs.controller_down
+                  else self.cs.router.decide)
+        verdict, node = decide(now, live, req)
         if verdict == "shed":
             self.cs.mark_shed(req)
         elif verdict == "defer":
@@ -532,6 +571,129 @@ class FleetManager:
             self.loop.push(now + self.cfg.requeue_latency_s,
                            self._handle, "requeue", req)
         return released
+
+    # ---------------- non-oracle death + failure detection ----------------
+    def _on_die(self, nid: int) -> None:
+        """Physical death, unobserved: the node's state is destroyed NOW
+        (KV loss, power dark — that is physics) but the control plane
+        learns nothing here. The evicted requests and released watts go to
+        limbo; the failure detector's dead verdict (``declare_dead``)
+        requeues and re-levels them later — the detection latency is real
+        lost time, which is exactly what the oracle fail path hid."""
+        now = self.loop.now
+        node = self.cs.nodes[nid]
+        if node.defunct or not node.pm.powered:
+            return
+        self.cs.active[nid] = False
+        self._suspected.discard(nid)
+        if self.cs._flip_node == nid:
+            self.cs._flip_node = None
+        node.leaving = False
+        token = self._force_tokens.pop(nid, None)
+        if token is not None:
+            self.loop.cancel(token)
+        self.churn_trace.append((now, "die", nid))
+        reqs = node.evict_for_failure()      # marks the node defunct
+        released = node.pm.power_off(now)
+        node.power_samples.append((now, 0.0))
+        for req in reqs:
+            node.release_record(req)
+            req.reset_for_requeue()
+        self._limbo[nid] = reqs
+        self._limbo_watts[nid] = released
+
+    def suspect(self, nid: int) -> None:
+        """Failure-detector suspicion: de-route the node, nothing more. Its
+        queues, batches, and KV keep running — suspicion must be cheap to
+        undo, because heartbeat loss is often the telemetry path, not the
+        node."""
+        node = self.cs.nodes[nid]
+        if node.defunct or node.leaving or not self.cs.active[nid]:
+            return
+        self.cs.active[nid] = False
+        self._suspected.add(nid)
+        self.churn_trace.append((self.loop.now, "suspected", nid))
+
+    def reintegrate(self, nid: int) -> None:
+        """A suspected node heartbeated again (false suspicion): route to
+        it again. Nothing was evicted, so nothing is lost — the
+        reintegration-without-KV-loss path."""
+        if nid not in self._suspected:
+            return
+        self._suspected.discard(nid)
+        node = self.cs.nodes[nid]
+        if node.defunct or not node.pm.powered:
+            return
+        self.cs.active[nid] = True
+        self.churn_trace.append((self.loop.now, "reintegrated", nid))
+
+    def declare_dead(self, nid: int) -> None:
+        """Failure-detector dead verdict — the moment the control plane
+        KNOWS. For a physically-dead node (limbo) this releases the
+        stranded work and watts into the normal recovery paths; for a node
+        that is actually alive but unheard past the dead timeout, fence it
+        out like a failure (split-brain guard: a node the control plane
+        declared dead must not keep serving)."""
+        now = self.loop.now
+        self._suspected.discard(nid)
+        node = self.cs.nodes[nid]
+        if nid in self._limbo:
+            reqs = self._limbo.pop(nid)
+            watts = self._limbo_watts.pop(nid, 0.0)
+            self.churn_trace.append((now, "dead_detected", nid))
+            for req in reqs:
+                self.requeue_trace.append((now, req.rid, nid))
+                self.loop.push(now + self.cfg.requeue_latency_s,
+                               self._handle, "requeue", req)
+            if self.cfg.elastic and self.cfg.redistribute and watts > 0:
+                self._grow_survivors(watts)
+            self.cs.assert_facility_invariant()
+            return
+        if node.defunct or not node.pm.powered:
+            return      # already handled (oracle fail / graceful leave)
+        self.cs.active[nid] = False
+        self.churn_trace.append((now, "fenced", nid))
+        if self.cs._flip_node == nid:
+            self.cs._flip_node = None
+        node.leaving = False
+        token = self._force_tokens.pop(nid, None)
+        if token is not None:
+            self.loop.cancel(token)
+        self._fail_node(
+            nid, redistribute=self.cfg.elastic and self.cfg.redistribute)
+
+    # ---------------- controller crash / restart ----------------
+    def _on_ctrl_crash(self, duration_s: float) -> None:
+        """Coordinator + autoscaler die for a window. Nodes run headless:
+        each locally enforces its last-committed caps (the PowerManager
+        state is node-local and survives), admission degrades to local
+        SLO-aware shedding, and any budget grant maturing in the window is
+        epoch-fenced. Overlapping windows coalesce into the first."""
+        now = self.loop.now
+        if self.cs.controller_down:
+            return
+        self.cs.controller_down = True
+        self.cs.crash_trace.append((now, "crash", self.cs.controller_epoch))
+        self.loop.push(now + duration_s, self._handle, "ctrl_restart", None)
+
+    def _on_ctrl_restart(self, _payload: object) -> None:
+        """Controller restart: bump the epoch (fencing every grant the
+        dead incarnation issued), rebuild coordinator state from its
+        periodic checkpoint, announce the restart so the autoscaler
+        replays its journal, and re-level facility headroom the fenced
+        grants left unclaimed (raise-only, self-clamping)."""
+        now = self.loop.now
+        if not self.cs.controller_down:
+            return
+        self.cs.controller_down = False
+        self.cs.controller_epoch += 1
+        self.cs.restore_control()
+        self.cs.crash_trace.append(
+            (now, "restart", self.cs.controller_epoch))
+        self.loop.publish("controller_restart", self.cs.controller_epoch)
+        if self.cfg.elastic and self.cfg.redistribute:
+            self._grow_survivors(self.cs.facility_budget_w)
+        self.cs.assert_facility_invariant()
 
     # ---------------- join ----------------
     def _on_join(self, nid: int):

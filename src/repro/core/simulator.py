@@ -952,6 +952,11 @@ class NodeSimulator:
         self.trace_caps.append((self.now, list(self.pm.effective),
                                 [g.role for g in self.gpus]))
         self.power_samples.append((self.now, sum(self.pm.effective)))
+        # liveness heartbeat on the shared loop: the fleet's failure
+        # detector (core.telemetry.HeartbeatDetector) infers alive/
+        # suspected/dead from these — a dead or powered-off node simply
+        # stops publishing (the powered gate above kills the re-arm)
+        self.loop.publish("heartbeat", self.node_id)
         if self.ctrl is not None and not self.coalesced:
             obs = self.observe()
             pre, dec = self.prefill_gpus(), self.decode_gpus()
@@ -1252,6 +1257,12 @@ class NodeSimulator:
             for g in pre)
         self._cap_tps_cache = (key, tps)
         return tps
+
+    def queue_head_age(self) -> float:
+        """Age of the oldest queued prefill request — the early-warning
+        term of ``router_load``, exposed separately so the telemetry bus
+        can snapshot the load signal's parts."""
+        return self._queue_ttft_estimate()
 
     def router_load(self, extra_tokens: int = 0) -> float:
         """Power-adjusted load signal for the cluster router: estimated time

@@ -1,0 +1,369 @@
+"""Control-plane telemetry: sampled node state, heartbeat failure
+detection, and durable state for crash-recoverable coordination.
+
+Until this module existed, every controller in the repo was omniscient:
+``ClusterCoordinator``, ``PowerAwareRouter``, and ``PredictiveAutoscaler``
+read exact node state at the instant of every decision, and a node failure
+was known fleet-wide the moment it happened. Real control planes see the
+world through a telemetry pipeline that samples, lags, and sometimes lies —
+and they crash. Three pieces close that gap:
+
+``TelemetryBus``
+    The one read path controllers use for node state (stress summaries,
+    router load signals, prefill capacity, marginal joules). By default
+    every read samples the node live — bit-identical to the direct reads it
+    replaced, so the entire existing test/benchmark surface is unchanged.
+    The ``ChaosEngine`` (and ONLY it — simcheck RC006) may install
+    ``telemetry_fault_fn`` to degrade the pipeline per node and window:
+
+    * ``"freeze"`` — reads serve the last-known-good snapshot; staleness
+      grows for the whole window (a wedged collector).
+    * ``"drop"`` — like freeze for state reads, and additionally the
+      node's heartbeats are swallowed (a partitioned telemetry path): the
+      failure detector may falsely suspect a healthy node.
+    * ``("sample", period_s)`` — sample-and-hold: reads refresh at most
+      once per period, so staleness is bounded by the period (a coarse
+      but honest pipeline).
+
+    Every node carries a freshness clock; ``staleness``/``max_staleness``
+    expose how old the served view is, and controllers hold their power
+    plans when the view exceeds ``TelemetryConfig.max_staleness_s``
+    (unless ``act_on_stale`` — the deliberately-broken naive arm of the
+    fig14 benchmark).
+
+``HeartbeatDetector``
+    Replaces the oracle "fail event = instantly known dead". Nodes publish
+    ``"heartbeat"`` events from their periodic control tick (a powered-off
+    or dead node simply stops); the detector drives an
+    alive -> suspected -> dead state machine per node with configurable
+    timeouts. A *suspected* node is only de-routed (``FleetManager.
+    suspect`` — no eviction, KV intact), so a false suspicion heals by
+    reintegration the moment a heartbeat gets through. A *dead* verdict
+    triggers real recovery: ``FleetManager.declare_dead`` requeues the
+    work a physically-dead node stranded (``schedule_die`` keeps it in
+    limbo until detection — watts and requests recover only when the
+    control plane *learns* of the death, not when it happens) or fences a
+    live node the detector gave up on (split-brain guard).
+
+``ControlJournal``
+    The durable half of crash-recoverable coordination: an append-only
+    journal of admitted arrivals plus a latest-snapshot slot, modeling the
+    WAL a real controller keeps outside its own process. A restarted
+    ``PredictiveAutoscaler`` rebuilds bit-identical forecaster state by
+    loading the snapshot and replaying the entries recorded after it
+    (proven by a golden test against an uncrashed controller fed the same
+    telemetry).
+
+Determinism: nothing here draws randomness or reads a wall clock; degraded
+reads are a pure function of (node, now) via the chaos engine's pre-built
+window lists, so chaos runs stay bit-identical per seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Tuple,
+                    Union)
+
+if TYPE_CHECKING:
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.controller import NodeStress
+    from repro.core.fleet import FleetManager
+    from repro.core.simulator import NodeSimulator
+
+# verdict of ``telemetry_fault_fn`` for one (node, now) read:
+# None (clean) | "freeze" | "drop" | ("sample", period_s)
+TelemetryFault = Union[None, str, Tuple[str, float]]
+
+
+@dataclasses.dataclass
+class TelemetryConfig:
+    """Knobs for ``TelemetryBus`` staleness handling."""
+    # controllers hold their power plan when any consulted node view is
+    # older than this (a fresh read has staleness exactly 0.0)
+    max_staleness_s: float = 1.0
+    # keep acting on stale views anyway (the naive arm of fig14): the hold
+    # is skipped but the hold_trace still records the violation
+    act_on_stale: bool = False
+
+
+class TelemetryBus:
+    """Sampled node-state reads for every controller on one cluster.
+
+    Accessor-per-signal (not snapshot-per-read) so the clean path stays
+    allocation-free and bit-identical to the direct node reads it
+    replaced. Per node it caches the last served sample of each signal;
+    degraded windows (``telemetry_fault_fn``) serve those caches instead
+    of sampling, and the per-node freshness clock stops advancing — which
+    is exactly what ``staleness`` reports.
+    """
+
+    def __init__(self, cluster: "ClusterSimulator",
+                 cfg: Optional[TelemetryConfig] = None):
+        self.cs = cluster
+        self.loop = cluster.loop
+        self.cfg = cfg or TelemetryConfig()
+        # the ONE sanctioned degradation point (simcheck RC006): the chaos
+        # engine installs a pure (node_id, now) -> TelemetryFault verdict
+        self.telemetry_fault_fn: Optional[
+            Callable[[int, float], TelemetryFault]] = None
+        # per-node caches: last served sample of each signal
+        self._parts: Dict[int, Tuple[float, int, float, float]] = {}
+        self._stress: Dict[int, Tuple[float, "NodeStress"]] = {}
+        self._jpt: Dict[int, Tuple[float, float]] = {}
+        # per-node freshness clock: last time ANY signal sampled live
+        self._t_fresh: Dict[int, float] = {}
+
+    # ---------------- degradation plumbing ----------------
+    def _fault(self, node_id: int, now: float) -> TelemetryFault:
+        fn = self.telemetry_fault_fn
+        return fn(node_id, now) if fn is not None else None
+
+    @staticmethod
+    def _use_cached(mode: TelemetryFault, t_cached: Optional[float],
+                    now: float) -> bool:
+        """Whether a degraded window serves the cached sample. First
+        contact inside a window (no cache yet) samples once — the
+        last-known-good snapshot IS the window-entry state."""
+        if mode is None or t_cached is None:
+            return False
+        if isinstance(mode, tuple):
+            return now - t_cached < mode[1]   # sample-and-hold period
+        return True                           # "freeze" / "drop"
+
+    def heartbeat_blocked(self, node_id: int, now: float) -> bool:
+        """Whether a telemetry dropout window is swallowing this node's
+        heartbeats right now (mode ``"drop"`` only — a frozen window
+        stales the state channel but heartbeats still arrive)."""
+        return self._fault(node_id, now) == "drop"
+
+    # ---------------- signal reads ----------------
+    def _node_parts(self, nd: "NodeSimulator") -> Tuple[int, float, float]:
+        """(queued prefill tokens, prefill capacity tps, queue head age) —
+        the decomposed ``router_load`` inputs, so a frozen view can still
+        price the arriving request's OWN tokens against frozen queue
+        state."""
+        now = self.loop.now
+        nid = nd.node_id
+        mode = self._fault(nid, now)
+        cached = self._parts.get(nid)
+        if self._use_cached(mode, cached[0] if cached else None, now):
+            assert cached is not None
+            return cached[1], cached[2], cached[3]
+        parts = (nd.queued_prefill_tokens(), nd.prefill_capacity_tps(),
+                 nd.queue_head_age())
+        self._parts[nid] = (now, parts[0], parts[1], parts[2])
+        self._t_fresh[nid] = now
+        return parts
+
+    def router_load(self, nd: "NodeSimulator",
+                    extra_tokens: int = 0) -> float:
+        """``NodeSimulator.router_load`` through the bus: identical float
+        arithmetic on a fresh read (bit-identity with the direct call);
+        on a degraded read the queue state is last-known-good but the
+        arriving request's tokens are its own."""
+        q_toks, rate, head_age = self._node_parts(nd)
+        if rate <= 0.0:
+            return float("inf")
+        return (q_toks + extra_tokens) / rate + head_age
+
+    def prefill_capacity_tps(self, nd: "NodeSimulator") -> float:
+        """Effective prefill capacity (``NodeSimulator.
+        prefill_capacity_tps``) through the bus."""
+        return self._node_parts(nd)[1]
+
+    def stress(self, nd: "NodeSimulator") -> "NodeStress":
+        """``NodeSimulator.stress_summary`` through the bus: the
+        coordinator's per-tick fleet scan."""
+        now = self.loop.now
+        nid = nd.node_id
+        mode = self._fault(nid, now)
+        cached = self._stress.get(nid)
+        if self._use_cached(mode, cached[0] if cached else None, now):
+            assert cached is not None
+            return cached[1]
+        s = nd.stress_summary()
+        self._stress[nid] = (now, s)
+        self._t_fresh[nid] = now
+        return s
+
+    def marginal_jpt(self, nd: "NodeSimulator", in_tokens: int,
+                     out_tokens: int) -> float:
+        """``NodeSimulator.marginal_joules_per_token`` through the bus.
+        A degraded read serves the price computed for the LAST request
+        shape sampled — a frozen pipeline cannot re-price per request."""
+        now = self.loop.now
+        nid = nd.node_id
+        mode = self._fault(nid, now)
+        cached = self._jpt.get(nid)
+        if self._use_cached(mode, cached[0] if cached else None, now):
+            assert cached is not None
+            return cached[1]
+        jpt = nd.marginal_joules_per_token(in_tokens, out_tokens)
+        self._jpt[nid] = (now, jpt)
+        self._t_fresh[nid] = now
+        return jpt
+
+    # ---------------- staleness bounds ----------------
+    def staleness(self, nd: "NodeSimulator") -> float:
+        """Age of this node's last live sample. 0.0 exactly when the most
+        recent read sampled live (or nothing was ever read)."""
+        return self.loop.now - self._t_fresh.get(nd.node_id, self.loop.now)
+
+    def max_staleness(self, nodes: List["NodeSimulator"]) -> float:
+        """Oldest view age across ``nodes`` — the bound a controller
+        checks AFTER reading its views and BEFORE acting on them."""
+        worst = 0.0
+        for nd in nodes:
+            s = self.staleness(nd)
+            if s > worst:
+                worst = s
+        return worst
+
+
+@dataclasses.dataclass
+class HeartbeatConfig:
+    """Failure-detector timeouts. Defaults assume the node control tick
+    (heartbeat source) fires every ~0.25 s: suspicion needs ~3 missed
+    beats, death ~8 — suspicion is cheap to undo (de-route only), death
+    is not (requeue / fencing)."""
+    suspect_after_s: float = 0.75   # missed-beat age before de-routing
+    dead_after_s: float = 2.0       # missed-beat age before declaring dead
+    check_period_s: float = 0.25    # detector sweep period
+
+
+class HeartbeatDetector:
+    """Alive -> suspected -> dead failure detection from heartbeats.
+
+    Nodes publish ``"heartbeat"`` on the shared loop from their control
+    tick; this detector sweeps every ``check_period_s`` and compares each
+    monitored node's last-heard age against the timeouts:
+
+    * ``suspect_after_s`` exceeded — ``FleetManager.suspect``: the node
+      is de-routed (no eviction; its queues and KV keep running). A
+      heartbeat that gets through reverses it (``reintegrate``) with
+      nothing lost — the false-suspicion path.
+    * ``dead_after_s`` exceeded — ``FleetManager.declare_dead``: a
+      physically-dead node's stranded work and watts finally recover
+      (``schedule_die`` limbo), or a live-but-unheard node is fenced out
+      like a failure (split-brain guard: a node the control plane has
+      declared dead must not keep serving).
+
+    Monitored set: active nodes, suspected nodes, and undetected corpses
+    (``FleetManager._limbo``). Nodes the fleet *chose* to power off
+    (standby, graceful leave) are not monitored — their silence is known.
+    """
+
+    def __init__(self, fleet: "FleetManager",
+                 cfg: Optional[HeartbeatConfig] = None):
+        self.fm = fleet
+        self.cs = fleet.cs
+        self.loop = fleet.loop
+        self.cfg = cfg or HeartbeatConfig()
+        self.bus = fleet.cs.telemetry
+        self.state: Dict[int, str] = {}       # node_id -> alive|suspected|dead
+        self._last_hb: Dict[int, float] = {}
+        self.trace: List[tuple] = []          # (t, node_id, transition)
+        self.drop_trace: List[tuple] = []     # (t, node_id) swallowed beats
+        now = self.loop.now
+        for nd in fleet.cs.nodes:
+            if fleet.cs.active[nd.node_id] and nd.pm.powered:
+                self.state[nd.node_id] = "alive"
+                self._last_hb[nd.node_id] = now
+        self.loop.subscribe("heartbeat", self._on_heartbeat)
+        fleet.detector = self
+
+    def start(self) -> None:
+        """Arm the periodic detector sweep (call before ``cluster.run``)."""
+        self.loop.push(self.loop.now, self._handle, "hb_check")
+
+    # ---------------- heartbeat sink ----------------
+    def _on_heartbeat(self, payload: object) -> None:
+        nid = int(payload)  # type: ignore[call-overload]
+        now = self.loop.now
+        if self.bus.heartbeat_blocked(nid, now):
+            self.drop_trace.append((now, nid))
+            return
+        self._last_hb[nid] = now
+        st = self.state.get(nid)
+        if st is None:
+            self.state[nid] = "alive"         # joined after detector start
+        elif st == "suspected":
+            self.state[nid] = "alive"
+            self.trace.append((now, nid, "reintegrated"))
+            self.fm.reintegrate(nid)
+        elif st == "dead":
+            # physically rejoined through a fleet join: monitor again
+            self.state[nid] = "alive"
+            self.trace.append((now, nid, "rejoined"))
+
+    # ---------------- periodic sweep ----------------
+    def _monitored(self, nid: int) -> bool:
+        return (self.cs.active[nid] or self.state.get(nid) == "suspected"
+                or nid in self.fm._limbo)
+
+    def _handle(self, kind: str, payload: object = None) -> None:
+        """Detector sweep event: drives suspected/dead transitions. Dead
+        verdicts mutate cross-node state (requeues, re-levels), so the
+        sweep runs under the same sync/validate discipline as fleet
+        events."""
+        assert kind == "hb_check", kind
+        now = self.loop.now
+        self.cs.sync_all()
+        for nid in sorted(self.state):
+            st = self.state[nid]
+            if st == "dead" or not self._monitored(nid):
+                continue
+            age = now - self._last_hb.get(nid, now)
+            if age >= self.cfg.dead_after_s:
+                self.state[nid] = "dead"
+                self.trace.append((now, nid, "dead"))
+                self.fm.declare_dead(nid)
+            elif age >= self.cfg.suspect_after_s and st == "alive":
+                self.state[nid] = "suspected"
+                self.trace.append((now, nid, "suspected"))
+                self.fm.suspect(nid)
+        self.cs.validate_all()
+        if self.loop.heap:
+            self.loop.push(now + self.cfg.check_period_s, self._handle,
+                           "hb_check")
+
+
+class ControlJournal:
+    """Durable controller inputs: an arrival journal + a snapshot slot.
+
+    Models the write-ahead log a real controller keeps OUTSIDE its own
+    process: the journal keeps recording through a controller crash
+    (arrivals the dead controller never saw are still journaled), and the
+    snapshot is whatever state the controller last persisted. Recovery =
+    ``load_state(snapshot)`` + replay of ``entries[n:]`` — deterministic
+    and bit-identical to never having crashed, because the forecaster's
+    state is a pure function of the observation stream.
+    """
+
+    def __init__(self, loop: object):
+        self.loop = loop
+        self.entries: List[Tuple[float, int]] = []   # (t, input_tokens)
+        self._snapshot: Optional[Tuple[float, int, tuple]] = None
+        self.n_snapshots = 0
+        loop.subscribe("arrival", self._on_arrival)  # type: ignore[attr-defined]
+
+    def _on_arrival(self, payload: object) -> None:
+        rec = payload.rec if hasattr(payload, "rec") else payload
+        self.entries.append(
+            (self.loop.now, rec.input_tokens))  # type: ignore[attr-defined]
+
+    def snapshot(self, state: tuple) -> None:
+        """Persist controller ``state`` against the current journal
+        position (latest snapshot wins — the periodic checkpoint)."""
+        self._snapshot = (
+            self.loop.now, len(self.entries), state)  # type: ignore[attr-defined]
+        self.n_snapshots += 1
+
+    def latest(self) -> Optional[Tuple[float, int, tuple]]:
+        """The latest persisted ``(t, journal_position, state)``, if any."""
+        return self._snapshot
+
+    def replay_from(self, n: int) -> List[Tuple[float, int]]:
+        """Journal entries recorded at or after position ``n`` — what a
+        recovering controller replays on top of the snapshot."""
+        return self.entries[n:]

@@ -342,6 +342,87 @@ def test_value_density_orders_shedding():
     assert PowerAwareRouter._density(hi) > PowerAwareRouter._density(lo)
 
 
+def test_shed_on_empty_queue_is_age_driven():
+    """Shedding needs no queue: a request that aged past its shed
+    threshold before reaching the router (defer storm, requeue latency)
+    is shed even against a completely idle cluster — the projection is
+    time-already-lost plus load, and the load term can be zero."""
+    cs = ClusterSimulator(CFG, policy_4p4d(500), 1, node_budget_w=4000.0,
+                          ctrl_cfg=dyn(ttft_slo=0.5), seed=7,
+                          admission=AdmissionConfig(slo_aware=True))
+    fresh = SimRequest(RequestRecord(0, 5.0, 4096, 256, ttft_slo=0.5))
+    aged = SimRequest(RequestRecord(1, 0.0, 4096, 256, ttft_slo=0.5))
+    verdict, node = cs.router.decide(5.0, cs.nodes, fresh)
+    assert verdict == "admit" and node is not None
+    verdict, node = cs.router.decide(5.0, cs.nodes, aged)
+    assert verdict == "shed" and node is None
+    assert cs.router.shed_trace[-1][1] == 1
+
+
+def test_all_requests_shed_terminates_with_zero_goodput():
+    """Total shed is a terminal state, not a hang: when every request is
+    hopeless on arrival the run ends with n_shed == n, zero goodput, and
+    zero shed energy (nothing was ever admitted)."""
+    cs = ClusterSimulator(CFG, policy_4p4d(500), 1, node_budget_w=4000.0,
+                          ctrl_cfg=dyn(ttft_slo=0.5), seed=7,
+                          admission=AdmissionConfig(slo_aware=True,
+                                                    shed_frac=1.0))
+    # pre-seed aged arrivals (chaos-surge style: arrival stamp t=0,
+    # delivered at t=1): every projection opens at 2x the SLO
+    for i in range(12):
+        rec = RequestRecord(i, 0.0, 4096, 256, ttft_slo=0.5,
+                            tpot_slo=0.040)
+        cs.records.append(rec)
+        cs.loop.push(1.0, cs._handle, "arrival", (SimRequest(rec), None))
+    s = cs.run(Workload([]))
+    assert s.n_shed == 12 == cs.n_shed
+    assert all(r.shed_t is not None and r.finish is None
+               for r in cs.records)
+    assert s.shed_energy_j == 0.0
+    assert s.n_good == 0
+    assert cs.n_unfinished() == 0
+
+
+def test_value_density_ties_shed_deterministically():
+    """An all-identical workload makes every value-density comparison a
+    tie; the tie-break (arrival order through the rotating router) must
+    be deterministic — same seed, same shed set, bit-identical records."""
+    hi = SimRequest(RequestRecord(0, 0.0, 512, 512))
+    lo = SimRequest(RequestRecord(1, 0.0, 1024, 1024))
+    assert PowerAwareRouter._density(hi) == PowerAwareRouter._density(lo)
+
+    def fp():
+        cs = ClusterSimulator(CFG, policy_4p4d(500), 1,
+                              node_budget_w=4000.0,
+                              ctrl_cfg=dyn(ttft_slo=0.5), seed=7,
+                              admission=AdmissionConfig(slo_aware=True))
+        s = cs.run(wl(n=60, qps=40.0, ttft=0.5))
+        return s.n_shed, [(r.rid, r.finish, r.shed_t, r.energy_j)
+                          for r in cs.records]
+    n_shed_a, fp_a = fp()
+    n_shed_b, fp_b = fp()
+    assert n_shed_a > 0
+    assert fp_a == fp_b
+
+
+def test_shed_after_partial_prefill_keeps_spent_joules():
+    """A request that burned prefill joules, lost its node, and was then
+    shed at re-admission must carry those joules into shed_energy_j —
+    wasted work stays on the bill (reset_for_requeue keeps energy)."""
+    cs, fm = make_fleet(n_nodes=2, fcfg=FleetConfig(
+        requeue_latency_s=0.6), admission=AdmissionConfig(slo_aware=True))
+    fm.schedule_fail(0.05, 0)       # mid-prefill, the serving node dies
+    # admitted while idle; the batch energy is charged when prefill
+    # starts, then the failure requeues it and the defer loop ages it
+    # past the shed threshold
+    s = cs.run(Workload([(0.0, 4096, 256, 0.5, 0.040)]))
+    rec = cs.records[0]
+    assert rec.shed_t is not None and rec.finish is None
+    assert rec.energy_j > 0.0, "partial prefill joules were spent"
+    assert s.shed_energy_j == pytest.approx(rec.energy_j)
+    assert cs.n_unfinished() == 0
+
+
 # ---------------------------------------------------------------------------
 # ChaosEngine: surge pre-seeding + seeded determinism contract
 # ---------------------------------------------------------------------------

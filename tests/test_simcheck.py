@@ -312,6 +312,24 @@ def test_cli_exit_codes(tmp_path, capsys):
                           "--no-baseline"]) == 1
 
 
+def test_cli_stale_baseline_entries_fail(tmp_path, capsys):
+    """A baseline entry whose finding no longer exists is debt-list rot:
+    the CLI must fail on it, and ``--allow-stale`` must downgrade it back
+    to a warning (escape hatch for mid-refactor runs)."""
+    mod = tmp_path / "mod.py"
+    mod.write_text(PUSH_SRC)
+    bl = tmp_path / "bl.txt"
+    assert simcheck_main([str(mod), "--baseline", str(bl),
+                          "--update-baseline"]) == 0
+    # fix lands: the finding disappears, its baseline entry goes stale
+    mod.write_text("def api(x: int) -> int:\n    return x\n")
+    capsys.readouterr()
+    assert simcheck_main([str(mod), "--baseline", str(bl)]) == 1
+    assert "stale baseline entry" in capsys.readouterr().out
+    assert simcheck_main([str(mod), "--baseline", str(bl),
+                          "--allow-stale"]) == 0
+
+
 def test_repo_tree_is_clean_against_checked_in_baseline():
     repo = Path(__file__).resolve().parents[1]
     findings, n_files = check_paths([str(repo / "src")])

@@ -1,0 +1,328 @@
+"""Control-plane fault tolerance (core/telemetry.py + cluster/fleet/
+autoscale wiring): telemetry-bus bit-identity and degraded windows
+(freeze / dropout / sample-and-hold), coordinator staleness holds,
+heartbeat failure detection (false suspicion, physical death, split-brain
+fencing), controller crash windows (headless admission, epoch-fenced
+budget grants, restart re-level), the snapshot+replay recovery golden
+test, and the sanitizer's epoch-fence check."""
+import dataclasses
+
+import pytest
+
+from repro.analysis.check.sanitize import InvariantViolation
+from repro.configs import get_config
+from repro.core.autoscale import AutoscaleConfig, PredictiveAutoscaler
+from repro.core.chaos import ChaosConfig, ChaosEngine
+from repro.core.cluster import (AdmissionConfig, ClusterConfig,
+                                ClusterSimulator)
+from repro.core.controller import ControllerConfig, policy_4p4d
+from repro.core.events import EventLoop
+from repro.core.fleet import FleetConfig, FleetManager
+from repro.core.goodput import RequestRecord
+from repro.core.simulator import Workload
+from repro.core.telemetry import (ControlJournal, HeartbeatConfig,
+                                  HeartbeatDetector, TelemetryConfig)
+
+CFG = get_config("llama31_8b")
+
+
+def dyn(**kw):
+    return dataclasses.replace(ControllerConfig(), allow_power=True,
+                               allow_gpu=False, **kw)
+
+
+def make_fleet(n_nodes=3, budget=4000.0, fcfg=None, **kw):
+    cs = ClusterSimulator(CFG, policy_4p4d(500), n_nodes,
+                          node_budget_w=budget,
+                          ctrl_cfg=dyn(ttft_slo=2.0),
+                          cluster_cfg=ClusterConfig(allow_shift=True),
+                          seed=7, **kw)
+    fm = FleetManager(cs, fcfg or FleetConfig())
+    return cs, fm
+
+
+def wl(n=60, qps=6.0, seed=0, ttft=2.0):
+    return Workload.uniform(n, qps=qps, in_tokens=4096, out_tokens=256,
+                            seed=seed, ttft_slo=ttft, tpot_slo=0.040)
+
+
+# ---------------------------------------------------------------------------
+# TelemetryBus: clean-path bit-identity and degraded windows
+# ---------------------------------------------------------------------------
+
+def test_fresh_bus_reads_are_bit_identical_to_direct_reads():
+    cs, _fm = make_fleet()
+    tb = cs.telemetry
+    for nd in cs.nodes:
+        assert tb.router_load(nd, 4096) == nd.router_load(4096)
+        assert tb.prefill_capacity_tps(nd) == nd.prefill_capacity_tps()
+        assert tb.marginal_jpt(nd, 4096, 256) == \
+            nd.marginal_joules_per_token(4096, 256)
+        assert tb.staleness(nd) == 0.0
+    assert tb.max_staleness(cs.nodes) == 0.0
+
+
+def test_freeze_serves_last_known_good_and_staleness_grows():
+    cs, _fm = make_fleet(n_nodes=1)
+    tb = cs.telemetry
+    nd = cs.nodes[0]
+    before = tb.router_load(nd, 0)
+    tb.telemetry_fault_fn = lambda nid, now: "freeze"
+    cs.loop.now = 5.0
+    # live node state changes under the frozen pipeline...
+    nd.queued_prefill_tokens = lambda: 10 ** 6
+    assert nd.router_load(0) > before
+    # ...but the bus keeps serving the last-known-good view, and the
+    # freshness clock reports exactly how old that view is
+    assert tb.router_load(nd, 0) == before
+    assert tb.staleness(nd) == 5.0
+    assert tb.max_staleness([nd]) == 5.0
+    # the window lifting does not rewrite history: staleness stays until
+    # the next read actually samples live
+    tb.telemetry_fault_fn = None
+    assert tb.staleness(nd) == 5.0
+    tb.router_load(nd, 0)
+    assert tb.staleness(nd) == 0.0
+
+
+def test_sample_and_hold_bounds_staleness_by_the_period():
+    cs, _fm = make_fleet(n_nodes=1)
+    tb = cs.telemetry
+    nd = cs.nodes[0]
+    tb.telemetry_fault_fn = lambda nid, now: ("sample", 1.0)
+    tb.router_load(nd, 0)               # first contact samples live
+    assert tb.staleness(nd) == 0.0
+    cs.loop.now = 0.5
+    tb.router_load(nd, 0)               # inside the period: held
+    assert tb.staleness(nd) == 0.5
+    cs.loop.now = 1.5
+    tb.router_load(nd, 0)               # period expired: resamples
+    assert tb.staleness(nd) == 0.0
+    # only a dropout window swallows heartbeats; sample/freeze do not
+    assert not tb.heartbeat_blocked(0, 1.5)
+    tb.telemetry_fault_fn = lambda nid, now: "drop"
+    assert tb.heartbeat_blocked(0, 1.5)
+
+
+def test_coordinator_holds_power_plan_on_stale_telemetry():
+    def run(act_on_stale):
+        cs, fm = make_fleet(sanitize=True, telemetry=TelemetryConfig(
+            act_on_stale=act_on_stale))
+        ch = ChaosEngine(fm, ChaosConfig(seed=0))
+        ch.schedule_telemetry_freeze(2.0, 4.0)
+        cs.run(wl())
+        return cs
+    cs = run(False)
+    assert cs.hold_trace, "the freeze must trip the staleness bound"
+    for t, reason, stale_s in cs.hold_trace:
+        assert reason == "stale"
+        assert stale_s > cs.telemetry.cfg.max_staleness_s
+        assert 2.0 < t < 6.5          # holds only while the view is old
+    # the naive config records the same violations but keeps acting
+    assert run(True).hold_trace
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatDetector: suspicion, death, split-brain fencing
+# ---------------------------------------------------------------------------
+
+def test_false_suspicion_reintegrates_without_kv_loss():
+    cs, fm = make_fleet(sanitize=True)
+    det = HeartbeatDetector(fm, HeartbeatConfig())
+    det.start()
+    ch = ChaosEngine(fm, ChaosConfig(seed=0))
+    # node 1's heartbeats swallowed long enough to suspect, not to kill
+    ch.schedule_telemetry_dropout(3.0, 1.2, node_ids=[1])
+    cs.run(wl())
+    assert det.drop_trace, "the dropout must have swallowed heartbeats"
+    kinds = [(k, n) for _, k, n in fm.churn_trace]
+    assert ("suspected", 1) in kinds and ("reintegrated", 1) in kinds
+    assert not any(k in ("fail", "die", "fenced", "dead_detected")
+                   for k, _ in kinds)
+    assert not fm.kv_loss_trace and not fm.requeue_trace
+    assert cs.active[1] and cs.nodes[1].pm.powered
+    assert det.state[1] == "alive"
+    assert cs.n_unfinished() == 0
+
+
+def test_node_death_requeues_at_detection_not_at_death():
+    cs, fm = make_fleet(sanitize=True)
+    det = HeartbeatDetector(fm, HeartbeatConfig())
+    det.start()
+    ch = ChaosEngine(fm, ChaosConfig(seed=0))
+    ch.schedule_node_death(3.0, 2)
+    fm.schedule_join(9.0, 2)
+    cs.run(wl())
+    t_die = next(t for t, k, n in fm.churn_trace if k == "die" and n == 2)
+    t_det = next(t for t, k, n in fm.churn_trace
+                 if k == "dead_detected" and n == 2)
+    assert t_die == pytest.approx(3.0)
+    # detection is gated on the heartbeat timeout — the latency is real
+    # (the age clock starts at the LAST heartbeat, up to one period
+    # before the death itself)
+    assert t_det >= 3.0 + det.cfg.dead_after_s - det.cfg.check_period_s
+    assert [k for _, n, k in det.trace if n == 2][:2] == \
+        ["suspected", "dead"]
+    # stranded work and watts recover at DETECTION time, not death time
+    assert all(t >= t_det for t, _rid, nid in fm.requeue_trace if nid == 2)
+    assert 2 not in fm._limbo
+    # the node rejoined and heartbeated back to monitored-alive
+    assert cs.active[2] and det.state[2] == "alive"
+    assert cs.n_unfinished() == 0
+
+
+def test_dead_timeout_fences_a_live_but_unheard_node():
+    cs, fm = make_fleet(sanitize=True)
+    det = HeartbeatDetector(fm, HeartbeatConfig())
+    det.start()
+    ch = ChaosEngine(fm, ChaosConfig(seed=0))
+    # heartbeats swallowed past dead_after_s: the detector must fence the
+    # node even though it is physically fine (split-brain guard)
+    ch.schedule_telemetry_dropout(3.0, 4.0, node_ids=[1])
+    cs.run(wl())
+    kinds = [(k, n) for _, k, n in fm.churn_trace]
+    assert ("suspected", 1) in kinds and ("fenced", 1) in kinds
+    assert det.state[1] == "dead"
+    assert not cs.active[1] and not cs.nodes[1].pm.powered
+    # fenced watts redistributed; conservation held throughout
+    for _t, _budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6
+    assert cs.n_unfinished() == 0
+
+
+# ---------------------------------------------------------------------------
+# Controller crash: headless fail-safe mode, epoch fencing, restart
+# ---------------------------------------------------------------------------
+
+def test_controller_crash_headless_admission_and_restart():
+    cs, fm = make_fleet(sanitize=True,
+                        admission=AdmissionConfig(slo_aware=True))
+    ch = ChaosEngine(fm, ChaosConfig(seed=0))
+    ch.schedule_controller_crash(3.0, 4.0)
+    cs.run(wl())
+    assert [k for _, k, _ in cs.crash_trace] == ["crash", "restart"]
+    (t_c, _, e0), (t_r, _, e1) = cs.crash_trace
+    assert t_c == pytest.approx(3.0) and t_r == pytest.approx(7.0)
+    assert e0 == 0 and e1 == 1 == cs.controller_epoch
+    assert not cs.controller_down
+    # the headless window still admits traffic (local round-robin +
+    # node-local shedding) and still probes the facility invariant
+    assert any(3.0 <= t < 7.0 for t, _nid in cs.router.trace)
+    assert any(3.0 <= t < 7.0 for t, _b, _tot in cs.budget_trace)
+    # watts fully re-leveled by the restart
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(cs.facility_budget_w)
+    assert cs.n_unfinished() == 0
+
+
+def _run_with_inflight_grant(crash_duration_fn):
+    """A budget shift whose grant matures at ``t_ready``, with a
+    controller crash window scheduled by ``crash_duration_fn(t_ready)``."""
+    cs, fm = make_fleet(n_nodes=2, sanitize=True)
+    t_ready, freed = cs.nodes[0].pm.shrink_budget(0.0, 200.0)
+    assert freed > 0.0
+    cs._inflight.update((0, 1))
+    cs.loop.push(t_ready, cs._handle, "budget_ready", (0, 1, freed, 0))
+    fm.schedule_controller_crash(0.0, crash_duration_fn(t_ready))
+    cs.run(wl(n=30))
+    return cs, freed
+
+
+def test_grant_maturing_inside_crash_window_is_fenced():
+    cs, freed = _run_with_inflight_grant(lambda t_ready: t_ready + 1.0)
+    t_f, src, dst, w, epoch = cs.fence_trace[0]
+    assert (src, dst, w, epoch) == (0, 1, freed, 0)
+    # fail-safe guard band: the source's cap lowering still committed (no
+    # grant ever exceeds the promise), the sink got nothing against the
+    # dead epoch, and the restart re-level reclaimed the headroom
+    assert all(e_issued == e_now and not down for
+               _t, _s, _d, _w, e_issued, e_now, down in cs.grant_trace)
+    assert sum(nd.pm.budget for nd in cs.nodes) == \
+        pytest.approx(cs.facility_budget_w)
+    assert cs.n_unfinished() == 0
+
+
+def test_grant_from_previous_epoch_is_fenced_after_restart():
+    # crash ends BEFORE the grant matures: at maturity the controller is
+    # back up but the epoch has advanced — the stale grant must still void
+    cs, freed = _run_with_inflight_grant(lambda t_ready: 0.5 * t_ready)
+    assert cs.controller_epoch == 1
+    t_f, src, dst, w, epoch = cs.fence_trace[0]
+    assert (src, dst, w, epoch) == (0, 1, freed, 0)
+    # here the restart re-level ran BEFORE the grant matured, so the
+    # fenced watts stay stranded as guard band — the fail-safe errs
+    # strictly UNDER the facility cap, never over it
+    total = sum(nd.pm.budget for nd in cs.nodes)
+    assert total == pytest.approx(cs.facility_budget_w - freed)
+    assert total <= cs.facility_budget_w + 1e-6
+
+
+def test_sanitizer_flags_epoch_violating_grant():
+    cs, _fm = make_fleet(n_nodes=2, sanitize=True)
+    san = cs.loop.sanitizer
+    # a grant committed against a stale epoch must never appear
+    cs.grant_trace.append((1.0, 0, 1, 200.0, 0, 1, False))
+    with pytest.raises(InvariantViolation):
+        san._check_epoch_fence()
+    cs2, _fm2 = make_fleet(n_nodes=2, sanitize=True)
+    # ...nor a grant committed while the controller is down
+    cs2.grant_trace.append((1.0, 0, 1, 200.0, 1, 1, True))
+    with pytest.raises(InvariantViolation):
+        cs2.loop.sanitizer._check_epoch_fence()
+
+
+# ---------------------------------------------------------------------------
+# Crash-recoverable coordination: journal + snapshot/replay golden test
+# ---------------------------------------------------------------------------
+
+def test_control_journal_records_snapshots_and_replays():
+    loop = EventLoop()
+    j = ControlJournal(loop)
+    loop.publish("arrival", RequestRecord(0, 0.0, 100, 10))
+    loop.now = 1.0
+    loop.publish("arrival", RequestRecord(1, 1.0, 200, 10))
+    assert j.entries == [(0.0, 100), (1.0, 200)]
+    j.snapshot(("state1",))
+    loop.now = 2.0
+    loop.publish("arrival", RequestRecord(2, 2.0, 300, 10))
+    j.snapshot(("state2",))              # latest-snapshot-wins slot
+    t, n, state = j.latest()
+    assert (t, n, state) == (2.0, 3, ("state2",))
+    assert j.n_snapshots == 2
+    assert j.replay_from(n) == []
+    assert j.replay_from(1) == [(1.0, 200), (2.0, 300)]
+
+
+def test_golden_recovery_is_bitidentical_to_an_uncrashed_run():
+    """The headline recovery guarantee: a controller that crashed, lost
+    its in-memory state, and rebuilt from snapshot + journal replay ends
+    the run with forecaster state bit-identical to a twin controller that
+    never crashed — under identical telemetry (admission off and static
+    membership keep the two data planes exactly equal)."""
+    def run(crash):
+        cs = ClusterSimulator(CFG, policy_4p4d(500), 2,
+                              node_budget_w=4000.0,
+                              ctrl_cfg=dyn(ttft_slo=2.0), seed=7,
+                              cluster_cfg=ClusterConfig(allow_shift=False),
+                              sanitize=True)
+        fm = FleetManager(cs, FleetConfig(elastic=True))
+        az = PredictiveAutoscaler(
+            fm, AutoscaleConfig(mode="static", period_s=2.0))
+        az.start()
+        if crash:
+            fm.schedule_controller_crash(4.0, 5.0)
+        cs.run(wl())
+        return cs, az
+    cs_a, az_a = run(True)
+    cs_b, az_b = run(False)
+    # identical telemetry: the durable journal saw the same stream even
+    # though the crashed controller's process missed five seconds of it
+    assert az_a.journal.entries == az_b.journal.entries
+    assert az_a.journal.n_snapshots > 0
+    assert any(k == "recovered" for _t, k, *_rest in az_a.decision_trace)
+    T = max(cs_a.loop.now, cs_b.loop.now)
+    # bit-identity gate #1: the live post-recovery forecaster
+    assert az_a.forecaster.state(T) == az_b.forecaster.state(T)
+    # bit-identity gate #2: the recovery protocol itself, replayed cold
+    f, _last_action = az_a._rebuild()
+    assert f.state(T) == az_b.forecaster.state(T)
