@@ -1,0 +1,176 @@
+"""Multi-tenant day: SLO classes + preemption + locality (beyond the paper).
+
+One three-tenant day — an interactive agent product (multi-turn sessions
+re-sending a shared system prompt, tight TTFT, priority 2), a batch
+summarization pipeline (long prefills, relaxed latency, priority 1), and
+background evals (lowest priority, loosest SLO) — replayed bit-identically
+against three cluster configurations under the same facility power budget:
+
+  full       affinity routing (requests follow their cached prefixes via
+             the router's own hint table) + priority preemption (an
+             arriving interactive request may evict a saturated decode
+             batch of strictly lower priority back to the queue);
+  capacity   the PR-6-era router: pure capacity scoring, blind to prefix
+             locality — sessions scatter across nodes and re-prefill
+             their whole conversation every turn (preemption stays on);
+  no_preempt affinity routing, but arriving high-priority work waits in
+             line behind saturated low-priority decode batches.
+
+All three arms run the identical workload, tenancy registry, prefix-cache
+budget, and constant electricity tariff — the arms differ only in the
+routing policy and the registry's ``preempt`` switch.
+
+Asserted here (fast mode too — this is the CI ``bench-smoke`` gate):
+
+* the interactive tenant's SLO attainment under ``full`` is >= both
+  ablation arms' under the identical day;
+* the interactive tenant's $/good-token under ``full`` is no worse than
+  either ablation (locality reuse and preemption do not buy the priority
+  tenant's latency with its own dollars — the per-tenant attribution in
+  ``goodput.summarize`` is what makes this auditable);
+* two runs of the ``full`` arm with the same seed produce bit-identical
+  per-request records — the subsystem keeps the determinism contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Timer, dyn_ctrl, save_artifact
+from repro.configs import get_config
+from repro.core.autoscale import SignalTrace
+from repro.core.cluster import ClusterConfig, ClusterSimulator
+from repro.core.controller import policy_4p4d
+from repro.core.costmodel import MI300X
+from repro.core.prefixcache import PrefixCacheConfig
+from repro.core.simulator import Workload
+from repro.core.tenancy import TenantRegistry, TenantSpec
+
+N_NODES = 3
+NODE_BUDGET_W = 4000.0          # power-constrained nodes (fig9 regime)
+POLICY = policy_4p4d(500)
+DECODE_SLOTS = 4                # per-GPU decode cap: saturation pressure
+PRICE_USD_KWH = 0.20            # constant tariff: $ differences are joules
+CARBON_G_KWH = 400.0
+
+TENANTS = (TenantSpec("interactive", ttft_slo=0.8, tpot_slo=0.040,
+                      priority=2, weight=2.0),
+           TenantSpec("batch", ttft_slo=4.0, tpot_slo=0.080,
+                      priority=1, weight=1.0),
+           TenantSpec("bgeval", ttft_slo=8.0, tpot_slo=0.200,
+                      priority=0, weight=0.5))
+
+
+def scale(fast: bool) -> int:
+    """Session/request counts scale with this (fast mode: CI smoke)."""
+    return 1 if fast else 3
+
+
+def day(fast: bool, seed: int) -> Workload:
+    """The three tenants' interleaved day (drawn at build time — the run
+    itself is deterministic), identical across arms."""
+    k = scale(fast)
+    interactive = Workload.sessions(
+        10 * k, turns=4, qps=2.5, tenant="interactive", seed=seed,
+        system_tokens=2048, turn_tokens=256, out_tokens=96,
+        ttft_slo=0.8, tpot_slo=0.040)
+    batch = Workload.uniform(
+        30 * k, qps=6.0, in_tokens=4096, out_tokens=512, seed=seed + 1,
+        ttft_slo=4.0, tpot_slo=0.080, tenant="batch")
+    bgeval = Workload.uniform(
+        20 * k, qps=3.0, in_tokens=2048, out_tokens=512, seed=seed + 2,
+        ttft_slo=8.0, tpot_slo=0.200, tenant="bgeval")
+    return Workload(interactive.entries + batch.entries + bgeval.entries,
+                    name="multitenant_day")
+
+
+def _run(arm: str, fast: bool, seed: int = 5):
+    assert arm in ("full", "capacity", "no_preempt"), arm
+    reg = TenantRegistry(TENANTS, preempt=(arm != "no_preempt"))
+    cs = ClusterSimulator(
+        get_config("llama31_8b"), POLICY, N_NODES,
+        node_budget_w=NODE_BUDGET_W,
+        ctrl_cfg=dyn_ctrl(gpu=False, ttft_slo=2.0),
+        cluster_cfg=ClusterConfig(allow_shift=True), seed=7,
+        gpu=dataclasses.replace(MI300X, max_active_decode=DECODE_SLOTS),
+        router_policy="capacity" if arm == "capacity" else "affinity",
+        tenancy=reg, cache_cfg=PrefixCacheConfig())
+    cs.price_trace = SignalTrace([0.0], [PRICE_USD_KWH],
+                                 name="price", units="$/kWh")
+    cs.carbon_trace = SignalTrace([0.0], [CARBON_G_KWH],
+                                  name="carbon", units="gCO2/kWh")
+    s = cs.run(day(fast, seed))
+    for t, budgets, total in cs.budget_trace:
+        assert total <= cs.facility_budget_w + 1e-6, (t, budgets, total)
+    assert all(np.isfinite(r.energy_j) and r.energy_j > 0
+               for r in cs.records), "every record must carry spent joules"
+    return cs, s
+
+
+def fingerprint(cs) -> list:
+    """Per-request record tuple list — the bit-identity gate."""
+    return [(r.rid, r.tenant, r.arrival, r.prefill_done, r.finish,
+             r.energy_j, r.shed_t) for r in cs.records]
+
+
+def sweep(fast: bool, seed: int = 5):
+    rows = []
+    att = {}
+    cost = {}
+    for arm in ("full", "capacity", "no_preempt"):
+        cs, s = _run(arm, fast, seed)
+        ten = s.per_tenant
+        att[arm] = ten["interactive"]["slo_attainment"]
+        cost[arm] = ten["interactive"]["cost_per_good_token_usd"]
+        rows.append({
+            "arm": arm,
+            "slo_attainment": s.slo_attainment,
+            "goodput_rps": s.goodput_rps,
+            "cost_per_good_token_usd": s.cost_per_good_token_usd,
+            "energy_per_good_token_j": s.energy_per_good_token_j,
+            "preemptions": sum(len(nd.preempt_trace) for nd in cs.nodes),
+            "prefix_hit_tokens": sum(nd.prefix_hit_tokens
+                                     for nd in cs.nodes),
+            "per_tenant": ten,
+        })
+        hits = sum(nd.prefix_hit_tokens for nd in cs.nodes)
+        pre = sum(len(nd.preempt_trace) for nd in cs.nodes)
+        print(f"{arm:10s} interactive att={att[arm]*100:5.1f}%  "
+              f"fleet att={s.slo_attainment*100:5.1f}%  "
+              f"interactive $/Mtok {cost[arm]*1e6:6.3f}  "
+              f"hits={hits} preempts={pre}")
+    print(f"\nfull vs ablations on the interactive tenant: "
+          f"{att['full']*100:.1f}% vs capacity {att['capacity']*100:.1f}% / "
+          f"no_preempt {att['no_preempt']*100:.1f}%")
+    assert att["full"] >= att["capacity"], \
+        "affinity routing must not lose the high-priority tenant's SLO " \
+        "to capacity-only routing under the identical day"
+    assert att["full"] >= att["no_preempt"], \
+        "priority preemption must not lose the high-priority tenant's " \
+        "SLO to waiting in line under the identical day"
+    assert cost["full"] <= cost["capacity"] + 1e-12, \
+        "affinity must not buy the priority tenant's latency with its " \
+        "own dollars vs capacity-only routing"
+    assert cost["full"] <= cost["no_preempt"] + 1e-12, \
+        "preemption must not buy the priority tenant's latency with its " \
+        "own dollars vs waiting in line"
+    # determinism gate: same arm, same seed, bit-identical records
+    cs_a, _ = _run("full", fast, seed)
+    cs_b, _ = _run("full", fast, seed)
+    assert fingerprint(cs_a) == fingerprint(cs_b), \
+        "multi-tenant runs must be bit-identical per seed"
+    print("rerun determinism: bit-identical per-request records  OK")
+    return rows
+
+
+def main(fast: bool = False, seed: int = 5):
+    tm = Timer().start()
+    rows = sweep(fast, seed)
+    save_artifact("fig15_multitenant", {"sweep": rows, "seed": seed},
+                  timer=tm.stop())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

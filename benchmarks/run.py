@@ -23,6 +23,7 @@ Targets (the README's figure-reproduction table is generated from these):
     fig12autoscale predictive autoscaling on a price/carbon tariff
     fig13chaos    chaos replay: graceful degradation vs naive handling
     fig14control  control-plane chaos: fail-safe vs oracle vs naive control
+    fig15multitenant multi-tenant day: SLO classes + preemption + locality
     simperf       simulator event-throughput benchmark (perf gate)
     roofline      per-(arch x shape) roofline table from dry-run artifacts
     kernels       interpret-mode Pallas kernel microbenchmarks vs jnp oracles
@@ -37,7 +38,8 @@ import traceback
 
 SUITES = ("fig4", "fig5", "fig6", "fig7", "fig8", "fig9cluster",
           "fig10hetero", "fig11fleet", "fig12autoscale", "fig13chaos",
-          "fig14control", "simperf", "roofline", "kernels", "beyond")
+          "fig14control", "fig15multitenant", "simperf", "roofline",
+          "kernels", "beyond")
 
 # one-liners for --list / unknown-target help, same order as SUITES
 DESCRIPTIONS = {
@@ -52,6 +54,7 @@ DESCRIPTIONS = {
     "fig12autoscale": "predictive autoscaling on a price/carbon tariff",
     "fig13chaos": "chaos replay: graceful degradation vs naive handling",
     "fig14control": "control-plane chaos: fail-safe vs oracle vs naive control",
+    "fig15multitenant": "multi-tenant day: SLO classes + preemption + locality",
     "simperf": "simulator event-throughput benchmark (perf gate)",
     "roofline": "per-(arch x shape) roofline table from dry-run artifacts",
     "kernels": "interpret-mode Pallas kernel microbenchmarks vs jnp oracles",
@@ -76,9 +79,9 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated target subset (see --list)")
     ap.add_argument("--seed", type=int, default=None,
-                    help="fault-schedule seed for the chaos targets "
-                         "(fig13chaos, fig14control); default: each "
-                         "module's built-in seed")
+                    help="scenario seed for the seeded targets "
+                         "(fig13chaos, fig14control, fig15multitenant); "
+                         "default: each module's built-in seed")
     args = ap.parse_args()
     if args.list:
         print_targets()
@@ -95,8 +98,8 @@ def main() -> None:
                             fig8_dynamic, fig9_cluster_scaling,
                             fig10_hetero_dyngpu, fig11_elastic_fleet,
                             fig12_autoscale_tariff, fig13_chaos,
-                            fig14_control_chaos, kernels_bench, roofline,
-                            sim_throughput)
+                            fig14_control_chaos, fig15_multitenant,
+                            kernels_bench, roofline, sim_throughput)
     mods = {
         "fig4": fig4_power_curves, "fig5": fig5_static_slo,
         "fig6": fig6_queueing, "fig7": fig7_slo_scaling,
@@ -105,6 +108,7 @@ def main() -> None:
         "fig11fleet": fig11_elastic_fleet,
         "fig12autoscale": fig12_autoscale_tariff, "fig13chaos": fig13_chaos,
         "fig14control": fig14_control_chaos,
+        "fig15multitenant": fig15_multitenant,
         "simperf": sim_throughput,
         "roofline": roofline, "kernels": kernels_bench,
         "beyond": beyond_ablations,
@@ -120,7 +124,8 @@ def main() -> None:
             kw = {"fleet": True} if (args.fleet and name == "fig9cluster") \
                 else {}
             if args.seed is not None and name in ("fig13chaos",
-                                                  "fig14control"):
+                                                  "fig14control",
+                                                  "fig15multitenant"):
                 kw["seed"] = args.seed
             out = mods[name].main(fast=args.fast, **kw)
             n = len(out) if hasattr(out, "__len__") else 1

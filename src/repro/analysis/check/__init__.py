@@ -9,7 +9,7 @@ per-iteration path. This package machine-checks them, in two coupled
 halves:
 
 * **Static half** (``repro.analysis.check.rules``): an AST lint pass with
-  repo-specific rule codes RC001-RC006, run as
+  repo-specific rule codes RC001-RC007, run as
   ``python -m repro.analysis.check src/``. Violations are reported as
   ``file:line RCnnn severity message``; grandfathered findings live in a
   checked-in baseline (``simcheck-baseline.txt``) where every entry

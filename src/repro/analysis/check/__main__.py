@@ -77,7 +77,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.check",
         description="Repo-specific static analysis for the power-capped "
-                    "simulator core (rules RC001-RC006).")
+                    "simulator core (rules RC001-RC007).")
     ap.add_argument("paths", nargs="+", help="files or directories to check")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help=f"baseline file (default: {DEFAULT_BASELINE})")

@@ -46,6 +46,18 @@ RC006  Fault injection in ``core/`` only through the ChaosEngine API.
        core are exactly the unseeded, unreplayable chaos the fig13
        bit-identical-rerun gate exists to prevent. (Benchmarks, examples
        and tests live outside ``core/`` and drive the engine freely.)
+
+RC007  Prefix-cache and tenant-quota state may only be written through
+       their public APIs (the same pattern as RC001). ``PrefixCache``'s
+       radix/accounting state (``_radix``/``_used_tokens``/``_clock``/
+       ``_block_serial``) is legal to write only inside
+       ``lookup``/``insert``/``clear``/``pop_leaf``/``adopt``/
+       ``_evict_to_fit`` (+ ``__init__``); ``TenantRegistry``'s
+       ``_tenants``/``_admitted`` only inside ``register``/
+       ``note_admit`` (+ ``__init__``). Anything else — a router
+       reaching into a node's cache dict, a benchmark "seeding" quota
+       counters — breaks the single-residency and token-accounting
+       invariants the runtime sanitizer audits.
 """
 from __future__ import annotations
 
@@ -116,6 +128,17 @@ TIME_RETURNING = frozenset({"shift", "shrink_budget", "emergency_shrink",
 FAULT_HOOK_ATTRS = frozenset({"link_fault_fn", "telemetry_fault_fn"})
 CHAOS_CLASSES = frozenset({"ChaosEngine"})
 
+# --------------------------------------------------------------------------
+# RC007 tables: the mutation APIs of core.prefixcache.PrefixCache and
+# core.tenancy.TenantRegistry (same single-writer pattern as RC001)
+# --------------------------------------------------------------------------
+PREFIX_ATTRS = frozenset({"_radix", "_used_tokens", "_clock",
+                          "_block_serial"})
+PREFIX_WRITERS = frozenset({"__init__", "lookup", "insert", "clear",
+                            "pop_leaf", "adopt", "_evict_to_fit"})
+TENANT_ATTRS = frozenset({"_tenants", "_admitted"})
+TENANT_WRITERS = frozenset({"__init__", "register", "note_admit"})
+
 # RC003: names that smell like per-iteration float quantities (times,
 # energies, watts). Integer counters (tokens, ctx sums, queue depths) are
 # deliberately NOT matched — integer accumulation is exact.
@@ -185,6 +208,8 @@ class _Checker(ast.NodeVisitor):
         self.in_core = "core" in parts
         self.in_power_manager = parts[-1] == "power_manager.py"
         self.in_chaos = parts[-1] == "chaos.py"
+        self.in_prefixcache = parts[-1] == "prefixcache.py"
+        self.in_tenancy = parts[-1] == "tenancy.py"
         self.rc003_scope = (self.in_core
                            and parts[-1] in ("simulator.py", "fleet.py"))
 
@@ -268,6 +293,43 @@ class _Checker(ast.NodeVisitor):
                  f"write to PowerManager {kind} state ({attr!r}) outside "
                  f"the conservation API ({', '.join(api)}) — power "
                  f"conservation cannot be audited around it",
+                 token=ast.unparse(node))
+
+    # ---------------- RC007 ----------------
+    def _rc007_target(self, target: ast.AST) -> None:
+        # x._radix = / x._used_tokens += / x._radix[key] = / del x._radix[k]
+        if isinstance(target, ast.Attribute) and target.attr in PREFIX_ATTRS:
+            self._rc007_check(target, target.attr, "PrefixCache",
+                              PREFIX_WRITERS, self.in_prefixcache)
+        elif isinstance(target, ast.Attribute) and target.attr in TENANT_ATTRS:
+            self._rc007_check(target, target.attr, "TenantRegistry",
+                              TENANT_WRITERS, self.in_tenancy)
+        elif (isinstance(target, ast.Subscript)
+              and isinstance(target.value, ast.Attribute)):
+            attr = target.value.attr
+            if attr in PREFIX_ATTRS:
+                self._rc007_check(target, attr, "PrefixCache",
+                                  PREFIX_WRITERS, self.in_prefixcache)
+            elif attr in TENANT_ATTRS:
+                self._rc007_check(target, attr, "TenantRegistry",
+                                  TENANT_WRITERS, self.in_tenancy)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._rc007_target(elt)
+
+    def _rc007_check(self, node: ast.AST, attr: str, cls: str,
+                     writers: frozenset, in_file: bool) -> None:
+        inside_api = (in_file
+                      and self.class_stack == [cls]
+                      and bool(self.func_stack)
+                      and self.func_stack[0] in writers)
+        if inside_api:
+            return
+        api = sorted(writers - {"__init__"})
+        self.add("RC007", node,
+                 f"write to {cls} state ({attr!r}) outside its mutation "
+                 f"API ({', '.join(api)}) — prefix/tenant accounting "
+                 f"invariants cannot be audited around it",
                  token=ast.unparse(node))
 
     # ---------------- RC002 ----------------
@@ -487,17 +549,25 @@ class _Checker(ast.NodeVisitor):
     def visit_Assign(self, node: ast.Assign) -> None:
         for tgt in node.targets:
             self._rc001_target(tgt)
+            self._rc007_target(tgt)
             self._rc006_assign(tgt, node.value)
         self.generic_visit(node)
 
     def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
         self._rc001_target(node.target)
+        self._rc007_target(node.target)
         self._rc006_assign(node.target, node.value)
         self.generic_visit(node)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
         self._rc001_target(node.target)
+        self._rc007_target(node.target)
         self._rc003(node)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for tgt in node.targets:
+            self._rc007_target(tgt)
         self.generic_visit(node)
 
     def visit_Call(self, node: ast.Call) -> None:

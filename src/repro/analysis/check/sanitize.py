@@ -29,6 +29,16 @@ every event dispatch:
   (``sum(max(commanded, effective))`` integrated between dispatches)
   plus the prepay allowance for in-flight prefill batches (their energy
   is charged up front at kick time).
+* **Prefix-block single-residency** (``core.prefixcache``) — a cached
+  prefix block lives in at most ONE node's cache, or rides exactly one
+  in-flight migration as a detached ``carried_block`` — never both; each
+  cache's token accounting matches the sum over its entries, fits its
+  capacity, and keeps the prefix-closure invariant (every entry's parent
+  resident).
+* **No silent preemption drops** (``core.tenancy``) — every request a
+  priority preemption evicted must terminally resolve: until it finishes
+  or is shed it must be resident somewhere, in an event payload
+  (requeue/migration in flight), or in the fleet's detection limbo.
 
 Enabling: ``RAPID_SANITIZE=1`` in the environment, or ``sanitize=True``
 passed to ``EventLoop`` / ``NodeSimulator`` / ``ClusterSimulator`` /
@@ -124,9 +134,11 @@ class InvariantSanitizer:
         self._last_t = now
         nodes = self._nodes()
         self._check_power_hierarchy(nodes)
-        self._check_residency(nodes)
+        resident = self._check_residency(nodes)
         self._check_energy(nodes)
         self._check_epoch_fence()
+        self._check_prefix_blocks(nodes, loop)
+        self._check_preempted(nodes, loop, resident)
         self._power_sum_w = sum(
             max(c, e)
             for nd in nodes for c, e in zip(nd.pm.commanded, nd.pm.effective))
@@ -207,7 +219,7 @@ class InvariantSanitizer:
                     f"(floor allowance {floors:.3f} W)")
 
     # ---------------- invariant: KV single-residency ----------------
-    def _check_residency(self, nodes: List[Any]) -> None:
+    def _check_residency(self, nodes: List[Any]) -> Dict[int, Tuple[Any, str]]:
         seen: Dict[int, Tuple[Any, str]] = {}
 
         def note(req: Any, where: str) -> None:
@@ -245,6 +257,7 @@ class InvariantSanitizer:
                 for req in gpu.pending_join:
                     note(req, f"node{nid}.gpu{gpu.gid}.pending_join")
                     self._check_decode_gpu(nd, gpu, req)
+        return seen
 
     @staticmethod
     def _check_decode_gpu(nd: Any, gpu: Any, req: Any) -> None:
@@ -319,3 +332,102 @@ class InvariantSanitizer:
                 f"the integrated worst-case fleet power {bound:.6f} J "
                 f"(integral {self._energy_int_j:.6f} J + prefill prepay "
                 f"{prepay:.6f} J)")
+
+    # ------------- invariant: prefix-block single-residency -------------
+    @staticmethod
+    def _payload_reqs(loop: Any) -> List[Any]:
+        """Collect every request riding the event heap: bare ``SimRequest``
+        payloads (requeues, transfers), migration tickets (anything with a
+        ``.req`` attribute), and tuple/list payloads scanned element-wise.
+        Cancelled events are skipped — their payloads will never dispatch."""
+        out: List[Any] = []
+        cancelled = loop._cancelled
+
+        def scan(p: Any) -> None:
+            if p is None:
+                return
+            if hasattr(p, "rec"):               # a SimRequest
+                out.append(p)
+            elif hasattr(p, "req"):             # a migration ticket
+                scan(p.req)
+            elif isinstance(p, (tuple, list)):
+                for x in p:
+                    scan(x)
+
+        for _t, seq, _kind, _handler, payload in loop.heap:
+            if seq in cancelled:
+                continue
+            scan(payload)
+        return out
+
+    def _check_prefix_blocks(self, nodes: List[Any], loop: Any) -> None:
+        """Prefix-cache residency: each block lives in at most one node's
+        cache or one in-flight ``carried_block`` slot; per-cache token
+        accounting and the prefix-closure invariant hold."""
+        if not any(getattr(nd, "prefix_cache", None) is not None
+                   for nd in nodes):
+            return
+        blocks: Dict[Any, str] = {}
+
+        def note_block(bid: Any, where: str) -> None:
+            prev = blocks.get(bid)
+            if prev is not None:
+                raise InvariantViolation(
+                    f"prefix residency: block {bid} lives in {prev} AND "
+                    f"{where} — cached prefixes must be single-resident")
+            blocks[bid] = where
+
+        for nd in nodes:
+            pc = getattr(nd, "prefix_cache", None)
+            if pc is None or nd.defunct:
+                continue
+            entries = {path: ent for path, ent in pc.entries()}
+            tokens = 0
+            for path, ent in entries.items():
+                note_block(ent.block_id, f"node{nd.node_id}.cache")
+                tokens += ent.seg_tokens
+                if len(path) > 1 and path[:-1] not in entries:
+                    raise InvariantViolation(
+                        f"prefix closure: node {nd.node_id} caches "
+                        f"{path!r} without its parent {path[:-1]!r}")
+            if tokens != pc.used_tokens:
+                raise InvariantViolation(
+                    f"prefix accounting: node {nd.node_id} cache claims "
+                    f"{pc.used_tokens} used tokens but its entries sum to "
+                    f"{tokens}")
+            if pc.used_tokens > pc.capacity_tokens:
+                raise InvariantViolation(
+                    f"prefix accounting: node {nd.node_id} cache holds "
+                    f"{pc.used_tokens} tokens over its capacity "
+                    f"{pc.capacity_tokens}")
+        for req in self._payload_reqs(loop):
+            blk = getattr(req, "carried_block", None)
+            if blk is not None:
+                note_block(blk.block_id,
+                           f"carried_block(rid={req.rid})")
+
+    # ---------------- invariant: no silent preemption drops -------------
+    def _check_preempted(self, nodes: List[Any], loop: Any,
+                         resident: Dict[int, Tuple[Any, str]]) -> None:
+        """Every request a priority preemption evicted must still be
+        reachable until it terminally resolves: resident in some container,
+        riding an event payload (requeue or migration in flight), parked in
+        the fleet's failure-detection limbo, or finished/shed."""
+        victims: set = set()
+        for nd in nodes:
+            for _t, _rid, _gid, vrids in getattr(nd, "preempt_trace", ()):
+                victims.update(vrids)
+        if not victims:
+            return
+        alive = {req.rid for req, _where in resident.values()}
+        alive.update(r.rid for r in self._payload_reqs(loop))
+        if self.fleet is not None:
+            for reqs in self.fleet._limbo.values():
+                alive.update(r.rid for r in reqs)
+        for rec in self._records():
+            if (rec.rid in victims and rec.finish is None
+                    and rec.shed_t is None and rec.rid not in alive):
+                raise InvariantViolation(
+                    f"preemption: evicted request rid={rec.rid} is neither "
+                    f"finished, shed, resident, in flight, nor in limbo — "
+                    f"silent drop")

@@ -44,8 +44,11 @@ from repro.core.events import EventLoop
 from repro.core.goodput import (EnergySignal, GoodputSummary, RequestRecord,
                                 summarize)
 from repro.core.power_model import PowerModel
-from repro.core.simulator import NodeSimulator, SimRequest, Workload
+from repro.core.prefixcache import PrefixCacheConfig
+from repro.core.simulator import (NodeSimulator, SimRequest, Workload,
+                                  build_request)
 from repro.core.telemetry import TelemetryBus, TelemetryConfig
+from repro.core.tenancy import TenantRegistry
 
 
 @dataclasses.dataclass
@@ -115,18 +118,36 @@ class PowerAwareRouter:
     batch fills (amortization), so ranking on price alone would pile every
     request onto the busiest node.
 
+    ``affinity`` — session-locality routing over the capacity signal:
+    subtract the request's *estimated* cached-prefix hit (tokens the
+    target node's prefix cache would serve for free) from its marginal
+    token load before ranking. The estimate comes from the router's OWN
+    hint table — the last node each session path was routed to — never
+    from reading node caches directly (the PR-9 telemetry-honesty rule:
+    a stale hint degrades to a plain cache miss at prefill time, it never
+    lies about capacity). Requests with no session path score identically
+    to ``capacity``, so cold tenants are never starved by warm sessions.
+
     Ties (e.g. an idle homogeneous cluster) round-robin via a rotating
     start index so requests 0..k don't all pile onto node 0."""
 
-    POLICIES = ("capacity", "joules", "cost")
+    POLICIES = ("capacity", "joules", "cost", "affinity")
 
     def __init__(self, policy: str = "capacity",
                  price_fn: Optional[Callable[[int, float], float]] = None,
-                 admission: Optional[AdmissionConfig] = None):
+                 admission: Optional[AdmissionConfig] = None,
+                 tenancy: Optional[TenantRegistry] = None):
         assert policy in self.POLICIES, policy
         self.policy = policy
         self.price_fn = price_fn
         self.adm = admission or AdmissionConfig()
+        # tenant registry (core.tenancy): scales the admission value
+        # density by tenant weight; None keeps pre-tenancy behaviour
+        self.tenancy = tenancy
+        # session-affinity hints: prefix path -> (node_id, cached tokens
+        # last routed there). The router's private estimate of where each
+        # session's KV lives — see the ``affinity`` policy note above.
+        self._affinity: Dict[tuple, tuple] = {}
         # telemetry bus (set by ClusterSimulator): when present, all node
         # state reads go through it — sampled/degradable views instead of
         # omniscient direct reads. A fresh bus read is bit-identical to
@@ -157,6 +178,29 @@ class PowerAwareRouter:
         return (nd.marginal_joules_per_token(in_t, out_t) if tb is None
                 else tb.marginal_jpt(nd, in_t, out_t))
 
+    def _hit_tokens(self, nd: NodeSimulator,
+                    req: Optional[SimRequest]) -> int:
+        """Estimated cached-prefix tokens ``req`` would hit on ``nd``,
+        from the router's own hint table (longest matching prefix routed
+        to that node). Zero for prefixless requests and unknown paths."""
+        if req is None or not req.prefix_key:
+            return 0
+        path = req.prefix_key
+        aff = self._affinity
+        for k in range(len(path), 0, -1):
+            hint = aff.get(path[:k])
+            if hint is not None and hint[0] == nd.node_id:
+                return min(hint[1], req.rec.input_tokens - 1)
+        return 0
+
+    def invalidate_affinity(self, node_id: int) -> None:
+        """Drop every affinity hint pointing at ``node_id`` — its cache
+        died with it (failure / power-off) or was cleared on rejoin; a
+        stale hint would keep steering sessions at a cold node."""
+        if self._affinity:
+            self._affinity = {k: v for k, v in self._affinity.items()
+                              if v[0] != node_id}
+
     def pick(self, now: float, nodes: Sequence[NodeSimulator],
              req: Optional[SimRequest] = None) -> NodeSimulator:
         k = self._rr % len(nodes)
@@ -180,17 +224,33 @@ class PowerAwareRouter:
                 node = min(order, key=lambda nd: (
                     self._jpt(nd, extra, out),
                     self._load(nd, extra)))
+        elif self.policy == "affinity":
+            # the cached-prefix hit shrinks the request's marginal token
+            # load on the node believed to hold its session KV; every
+            # other signal (queue drain, head age) stays intact, so a
+            # session only sticks while the warm node stays competitive
+            node = min(order, key=lambda nd: self._load(
+                nd, max(extra - self._hit_tokens(nd, req), 0)))
         else:
             node = min(order, key=lambda nd: self._load(nd, extra))
+        if (self.policy == "affinity" and req is not None
+                and req.prefix_key):
+            self._affinity[req.prefix_key] = (
+                node.node_id, min(sum(req.prefix_tokens),
+                                  req.rec.input_tokens - 1))
         self.trace.append((now, node.node_id))
         return node
 
-    @staticmethod
-    def _density(req: SimRequest) -> float:
+    def _density(self, req: SimRequest) -> float:
         """Value proxy: output tokens per total token moved — goodput per
-        unit of serving cost. Decode-heavy requests score higher."""
+        unit of serving cost — scaled by the tenant's admission weight
+        when a registry is wired. Decode-heavy requests score higher;
+        heavier tenants shed later."""
         total = req.rec.input_tokens + req.rec.output_tokens
-        return req.rec.output_tokens / max(total, 1)
+        dens = req.rec.output_tokens / max(total, 1)
+        if self.tenancy is not None:
+            dens *= self.tenancy.weight(req.rec.tenant)
+        return dens
 
     def decide(self, now: float, nodes: Sequence[NodeSimulator],
                req: SimRequest
@@ -281,7 +341,9 @@ class ClusterSimulator:
                  fidelity: str = "macro", router_policy: str = "capacity",
                  sanitize: Optional[bool] = None,
                  admission: Optional[AdmissionConfig] = None,
-                 telemetry: Optional[TelemetryConfig] = None):
+                 telemetry: Optional[TelemetryConfig] = None,
+                 tenancy: Optional[TenantRegistry] = None,
+                 cache_cfg: Optional[PrefixCacheConfig] = None):
         """``gpu_specs`` / ``powers``: per-node hardware for heterogeneous
         clusters (default: every node is ``gpu``; a ``None`` power entry
         resolves from the node's spec). When ``node_budgets`` is omitted,
@@ -297,7 +359,12 @@ class ClusterSimulator:
         router front door (default off — see ``AdmissionConfig``).
         ``telemetry``: staleness bounds for the control-plane telemetry
         bus (see ``core.telemetry.TelemetryConfig``; the default bus is a
-        bit-identical pass-through until a ``ChaosEngine`` degrades it)."""
+        bit-identical pass-through until a ``ChaosEngine`` degrades it).
+        ``tenancy``: shared tenant registry (priority preemption on the
+        nodes, weight-biased admission at the router, per-tenant
+        attribution in the summary). ``cache_cfg``: build a per-node
+        prefix cache (``core.prefixcache``); both default off, keeping
+        single-stream runs on their exact pre-tenancy event sequence."""
         self.loop = EventLoop()
         if sanitize_enabled(sanitize):
             san = InvariantSanitizer()
@@ -325,15 +392,18 @@ class ClusterSimulator:
         # an open emergency window: the coordinator holds its power plan
         self.emergency_hold = False
         self.n_shed = 0
+        self.tenancy = tenancy
         self.nodes = [
             NodeSimulator(cfg, pols[i], node_budget_w=budgets[i],
                           gpu=specs[i], power=pwrs[i], ctrl_cfg=ctrl_cfg,
                           coalesced=coalesced, seed=seed + i, loop=self.loop,
-                          node_id=i, fidelity=fidelity, sanitize=sanitize)
+                          node_id=i, fidelity=fidelity, sanitize=sanitize,
+                          cache_cfg=cache_cfg, tenancy=tenancy)
             for i in range(n_nodes)
         ]
         self.fidelity = fidelity
-        self.router = PowerAwareRouter(router_policy, admission=admission)
+        self.router = PowerAwareRouter(router_policy, admission=admission,
+                                       tenancy=tenancy)
         # every controller on this cluster reads node state through the
         # bus; the chaos engine is the only writer of its fault hook
         self.telemetry = TelemetryBus(self, telemetry)
@@ -688,12 +758,13 @@ class ClusterSimulator:
             streams.append((node_id, wl))
         assert streams, "no workload given"
         for node_id, wl in streams:
-            for (t, it, ot, ts, ps) in wl.entries:
-                rec = RequestRecord(rid, t, it, ot, ttft_slo=ts, tpot_slo=ps)
+            for entry in wl.entries:
+                req = build_request(rid, entry)
                 rid += 1
-                self.records.append(rec)
+                self.records.append(req.rec)
+                t = req.rec.arrival
                 self.loop.push(t, self._handle, "arrival",
-                               (SimRequest(rec), node_id))
+                               (req, node_id))
 
     def n_unfinished(self) -> int:
         # every record lands in exactly one node via submit(); counters keep

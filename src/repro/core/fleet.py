@@ -325,6 +325,14 @@ class FleetManager:
                 self.loop.push(now, self._handle, "requeue", req)
                 continue
             ctx = req.rec.input_tokens + req.tokens_out
+            if (node.prefix_cache is not None and req.prefix_key
+                    and node.cache_cfg.carry_on_migrate):
+                # detach the request's own session leaf to travel with its
+                # KV (None if the leaf is shared or not resident); it rides
+                # the migration ticket with zero cache residency and lands
+                # via adopt_decode, or dies with the KV on requeue
+                req.carried_block = node.prefix_cache.pop_leaf(
+                    req.prefix_key)
             self._outbound[node.node_id] = \
                 self._outbound.get(node.node_id, 0) + 1
             self.migration_trace.append(
@@ -501,6 +509,9 @@ class FleetManager:
             self.loop.cancel(token)
         released = node.pm.power_off(now)
         node.power_samples.append((now, 0.0))
+        if node.prefix_cache is not None:
+            node.prefix_cache.clear()     # cached KV powers off with it
+        self.cs.router.invalidate_affinity(nid)
         self.churn_trace.append((now, "leave_done", nid))
         if self.cfg.redistribute and released > 0:
             self._grow_survivors(released)
@@ -563,6 +574,9 @@ class FleetManager:
         reqs = node.evict_for_failure()      # marks the node defunct
         released = node.pm.power_off(now)
         node.power_samples.append((now, 0.0))
+        # the prefix cache died with the HBM (evict_for_failure cleared
+        # it); stale router hints must stop steering sessions here
+        self.cs.router.invalidate_affinity(nid)
         for req in reqs:
             node.release_record(req)
             # KV and generated tokens are gone; the spent joules are not
@@ -596,6 +610,7 @@ class FleetManager:
         reqs = node.evict_for_failure()      # marks the node defunct
         released = node.pm.power_off(now)
         node.power_samples.append((now, 0.0))
+        self.cs.router.invalidate_affinity(nid)
         for req in reqs:
             node.release_record(req)
             req.reset_for_requeue()
@@ -779,6 +794,11 @@ class FleetManager:
         node._next_due = float("inf")
         node._ext_flip_gids.clear()
         node._role_version += 1
+        if node.prefix_cache is not None:
+            # rejoin powers fresh HBM: nothing cached survives the window,
+            # and no router hint may claim otherwise
+            node.prefix_cache.clear()
+        self.cs.router.invalidate_affinity(nid)
         absorbed = node.pm.power_on(now, grant)
         self.cs.active[nid] = True
         self.pending_joins.discard(nid)

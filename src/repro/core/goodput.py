@@ -17,7 +17,7 @@ goodput-relative energy price visibly worse.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Protocol
+from typing import Dict, List, Optional, Protocol
 
 import numpy as np
 
@@ -52,6 +52,11 @@ class RequestRecord:
     # shed (e.g. pre-failure work before a requeue was rejected) are
     # reported separately so degradation is visible, not laundered.
     shed_t: Optional[float] = None
+    # owning tenant (core.tenancy): drives preemption priority, admission
+    # weight, and the per-tenant attribution block in the summary. The
+    # "default" tag keeps single-stream workloads on their pre-tenancy
+    # accounting path.
+    tenant: str = "default"
 
     @property
     def ttft(self) -> Optional[float]:
@@ -103,6 +108,12 @@ class GoodputSummary:
     # already counted against slo_attainment via n_total
     n_shed: int = 0
     shed_energy_j: float = 0.0
+    # per-tenant attribution (core.tenancy): tenant name -> the same
+    # goodput/energy/$/carbon metrics restricted to that tenant's records.
+    # Empty for single-stream workloads, so existing JSON artifacts keep
+    # their schema (append-only — old artifacts still parse).
+    per_tenant: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
 
     def row(self) -> str:
         s = (f"good {self.slo_attainment*100:5.1f}%  goodput "
@@ -116,6 +127,14 @@ class GoodputSummary:
             s += f"  gCO2/Mtok {self.carbon_per_good_token_g*1e6:6.1f}"
         if self.n_shed > 0:
             s += f"  shed {self.n_shed}"
+        for name, t in self.per_tenant.items():
+            s += (f"\n    {name:12s} good {t['slo_attainment']*100:5.1f}%  "
+                  f"TTFT p90 {t['p90_ttft']:6.3f}s  "
+                  f"J/tok {t['energy_per_good_token_j']:5.2f}")
+            if t["total_cost_usd"] > 0.0:
+                s += f"  $/Mtok {t['cost_per_good_token_usd']*1e6:6.2f}"
+            if t["n_shed"] > 0:
+                s += f"  shed {t['n_shed']:.0f}"
         return s
 
 
@@ -136,6 +155,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
     tpot_slo = np.empty(n)
     energy = np.empty(n)
     shed = np.empty(n, dtype=bool)
+    tenants: List[str] = [""] * n
     for i, r in enumerate(records):
         arrival[i] = r.arrival
         pd_[i] = np.nan if r.prefill_done is None else r.prefill_done
@@ -145,6 +165,7 @@ def summarize(records: List[RequestRecord], duration_s: float,
         tpot_slo[i] = r.tpot_slo
         energy[i] = r.energy_j
         shed[i] = r.shed_t is not None
+        tenants[i] = r.tenant
     fin_mask = ~np.isnan(fin_t)
     n_fin = int(fin_mask.sum())
     ttft = pd_[fin_mask] - arrival[fin_mask]
@@ -169,16 +190,54 @@ def summarize(records: List[RequestRecord], duration_s: float,
     # below the tariff resolution this models (5-minute to hourly markets).
     t_spend = np.where(np.isnan(fin_t), arrival, fin_t)
     total_cost = cost_per_good = 0.0
+    cost = None
     if price_trace is not None:
         cost = energy / J_PER_KWH * price_trace.values_at(t_spend)
         total_cost = float(cost.sum())
         cost_per_good = total_cost / good_tokens if good_tokens > 0 else 0.0
     total_carbon = carbon_per_good = 0.0
+    carbon = None
     if carbon_trace is not None:
         carbon = energy / J_PER_KWH * carbon_trace.values_at(t_spend)
         total_carbon = float(carbon.sum())
         carbon_per_good = (total_carbon / good_tokens
                            if good_tokens > 0 else 0.0)
+    # per-tenant attribution: the same masks restricted per tenant tag.
+    # Only materialized when the workload is actually multi-tenant, so
+    # single-stream summaries (and their JSON artifacts) are unchanged.
+    per_tenant: Dict[str, Dict[str, float]] = {}
+    if any(t != "default" for t in tenants):
+        good_full = np.zeros(n, dtype=bool)
+        good_full[np.nonzero(fin_mask)[0]] = good_mask
+        ttft_full = np.full(n, np.nan)
+        ttft_full[fin_mask] = ttft
+        tarr = np.array(tenants)
+        for name in sorted(set(tenants)):
+            m = tarr == name
+            mf = m & fin_mask
+            good_m = good_full & m
+            n_good_m = int(good_m.sum())
+            gtok = float(out_tok[good_m].sum())
+            e_m = float(energy[m].sum())
+            c_m = float(cost[m].sum()) if cost is not None else 0.0
+            g_m = float(carbon[m].sum()) if carbon is not None else 0.0
+            per_tenant[name] = {
+                "n_total": int(m.sum()),
+                "n_finished": int(mf.sum()),
+                "n_good": n_good_m,
+                "slo_attainment": n_good_m / max(int(m.sum()), 1),
+                "goodput_rps": (n_good_m / duration_s
+                                if duration_s > 0 else 0.0),
+                "p90_ttft": (float(np.percentile(ttft_full[mf], 90))
+                             if int(mf.sum()) else float(np.inf)),
+                "total_energy_j": e_m,
+                "energy_per_good_token_j": e_m / gtok if gtok > 0 else 0.0,
+                "total_cost_usd": c_m,
+                "cost_per_good_token_usd": c_m / gtok if gtok > 0 else 0.0,
+                "total_carbon_g": g_m,
+                "carbon_per_good_token_g": g_m / gtok if gtok > 0 else 0.0,
+                "n_shed": int(shed[m].sum()),
+            }
     return GoodputSummary(
         n_total=n, n_finished=n_fin, n_good=n_good,
         slo_attainment=n_good / max(n, 1),
@@ -199,4 +258,5 @@ def summarize(records: List[RequestRecord], duration_s: float,
         carbon_per_good_token_g=carbon_per_good,
         n_shed=int(shed.sum()),
         shed_energy_j=float(energy[shed].sum()),
+        per_tenant=per_tenant,
     )

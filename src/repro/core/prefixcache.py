@@ -1,0 +1,240 @@
+"""Per-node radix-style prefix cache: KV reuse for session traffic.
+
+Multi-turn agentic traffic re-sends its whole conversation every turn,
+and whole tenant populations share one system prompt — SGLang's radix
+cache showed that serving this workload WITHOUT prefix reuse wastes most
+of the prefill budget re-computing KV the node already produced. This
+module models that reuse analytically, the same way the rest of
+``core/`` models step times: a request whose prompt starts with a cached
+prefix prefills only the un-cached suffix, shortening ``prefill_time``
+and shrinking the prefill joules charged to its record.
+
+Structure: a radix-style tree flattened into a dict keyed by the
+*cumulative* path tuple — ``("sys:acme",)``, ``("sys:acme", "s0")``,
+``("sys:acme", "s0", "t1")`` — one entry per segment, each holding its
+segment's token count and an LRU stamp. The **prefix-closure invariant**
+(every entry's parent is present) holds at all times: lookups walk the
+request's path from the root and stop at the first miss, inserts create
+missing levels root-first, and LRU eviction only removes *childless*
+entries. Capacity is a token budget carved from the node's KV memory
+(``PrefixCacheConfig.frac`` of what ``CostModel.max_decode_batch``
+derives from HBM minus weights); accounting is integer tokens end to
+end, so there is no float drift and macro/iter runs stay bit-identical.
+
+Cache *contents* follow the node's physical fate: ``clear()`` on node
+failure or rejoin (the KV is gone with the HBM), and a leaf may be
+detached (``pop_leaf``) to travel with a live request's KV migration,
+re-attaching at the destination only if its parent prefix is already
+resident there (``adopt``) — partial KV without its prefix is useless.
+Every entry carries a globally unique ``block_id`` (birth node, serial)
+so the runtime sanitizer can assert single-residency across the fleet,
+exactly as it does for requests.
+
+Determinism: LRU stamps come from a monotone serial counter, not a
+clock; eviction order is a pure function of the touch sequence, which is
+identical under both simulator fidelities because lookups and inserts
+happen only inside prefill events that fire identically under both.
+simcheck RC007 guards the tables (``_radix``, ``_used_tokens``, ...)
+against writes outside this module's public API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+PathKey = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Knobs for building one node's cache.
+
+    ``frac`` is the share of the node's free KV memory (HBM minus
+    weights, per GPU, summed over the node) reserved for prefix reuse;
+    ``carry_on_migrate`` lets a live request's own leaf travel with its
+    KV migration instead of dying with the source node's cache.
+    """
+    frac: float = 0.05
+    carry_on_migrate: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixBlock:
+    """A detached cache leaf in flight with a KV migration: the unit of
+    cross-node prefix transfer. Zero cache residency while detached —
+    it lives only on the migrating request until ``adopt`` re-attaches
+    it (or KV loss drops it)."""
+    block_id: Tuple[int, int]
+    path: PathKey
+    seg_tokens: int
+
+
+class _Entry:
+    """One radix segment: cumulative path -> (tokens, LRU stamp,
+    child count)."""
+    __slots__ = ("block_id", "seg_tokens", "last_touch", "children")
+
+    def __init__(self, block_id: Tuple[int, int], seg_tokens: int,
+                 last_touch: int):
+        self.block_id = block_id
+        self.seg_tokens = seg_tokens
+        self.last_touch = last_touch
+        self.children = 0
+
+
+class PrefixCache:
+    """Radix-style prefix cache for one node (see module docstring).
+
+    State is integer-token accounting under ``capacity_tokens``; all
+    mutation goes through ``lookup``/``insert``/``clear``/``pop_leaf``/
+    ``adopt`` (simcheck RC007)."""
+
+    def __init__(self, node_id: int, capacity_tokens: int):
+        self.node_id = node_id
+        self.capacity_tokens = int(capacity_tokens)
+        self._radix: Dict[PathKey, _Entry] = {}
+        self._used_tokens = 0
+        self._clock = 0
+        self._block_serial = 0
+        # observability (plain counters, not load-bearing state)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ---------------- read side ----------------
+    @property
+    def used_tokens(self) -> int:
+        """Tokens currently resident (the sanitizer cross-checks this
+        against the sum over entries)."""
+        return self._used_tokens
+
+    def __len__(self) -> int:
+        return len(self._radix)
+
+    def entries(self) -> Iterator[Tuple[PathKey, "_Entry"]]:
+        """Iterate (path, entry) pairs — the sanitizer's residency walk."""
+        return iter(self._radix.items())
+
+    def match_tokens(self, path: PathKey) -> int:
+        """Cached token count of the deepest resident prefix of ``path``,
+        WITHOUT touching LRU state (router-side estimation)."""
+        total = 0
+        for k in range(1, len(path) + 1):
+            ent = self._radix.get(path[:k])
+            if ent is None:
+                break
+            total += ent.seg_tokens
+        return total
+
+    # ---------------- mutation API (RC007 writers) ----------------
+    def lookup(self, path: PathKey) -> int:
+        """Cached token count of the deepest resident prefix of ``path``,
+        touching every matched level (LRU). Called once per request at
+        prefill-batch launch — the instant the reuse is physically
+        realized."""
+        total = 0
+        matched = False
+        for k in range(1, len(path) + 1):
+            ent = self._radix.get(path[:k])
+            if ent is None:
+                break
+            matched = True
+            self._clock += 1
+            ent.last_touch = self._clock
+            total += ent.seg_tokens
+        if matched:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return total
+
+    def insert(self, path: PathKey, seg_tokens: Tuple[int, ...]) -> None:
+        """Make ``path`` resident: create every missing level root-first
+        (``seg_tokens[i]`` is level ``i``'s segment size), touch existing
+        ones, and LRU-evict childless entries to fit the token budget.
+        A segment larger than the whole budget is skipped (and with it
+        its would-be descendants — closure is never broken)."""
+        assert len(seg_tokens) == len(path), (path, seg_tokens)
+        for k in range(1, len(path) + 1):
+            key = path[:k]
+            ent = self._radix.get(key)
+            if ent is not None:
+                self._clock += 1
+                ent.last_touch = self._clock
+                continue
+            seg = int(seg_tokens[k - 1])
+            if seg > self.capacity_tokens:
+                return                   # cannot ever fit: stop this branch
+            self._evict_to_fit(seg, protect=path)
+            if self._used_tokens + seg > self.capacity_tokens:
+                return                   # only protected entries left
+            self._block_serial += 1
+            self._clock += 1
+            self._radix[key] = _Entry((self.node_id, self._block_serial),
+                                      seg, self._clock)
+            self._used_tokens += seg
+            if k > 1:
+                self._radix[path[:k - 1]].children += 1
+
+    def clear(self) -> None:
+        """Drop everything — the node's HBM (and the KV in it) is gone.
+        Called on node failure and on rejoin after a power-off."""
+        self._radix = {}
+        self._used_tokens = 0
+
+    def pop_leaf(self, path: PathKey) -> Optional[PrefixBlock]:
+        """Detach ``path``'s entry for a KV migration, only if resident
+        and childless (an interior segment is load-bearing for other
+        sessions and stays). Returns the detached block, or ``None``."""
+        ent = self._radix.get(path)
+        if ent is None or ent.children != 0:
+            return None
+        del self._radix[path]
+        self._used_tokens -= ent.seg_tokens
+        if len(path) > 1:
+            self._radix[path[:-1]].children -= 1
+        return PrefixBlock(ent.block_id, path, ent.seg_tokens)
+
+    def adopt(self, block: PrefixBlock) -> bool:
+        """Re-attach a migrated block, keeping its identity. Requires its
+        parent prefix to be resident here already (a suffix without its
+        prefix is unusable KV) and the token budget to fit it after LRU
+        eviction; returns whether the block landed (a dropped block is
+        simply lost — the next prefill recomputes it)."""
+        if block.path in self._radix:
+            return False
+        if len(block.path) > 1 and block.path[:-1] not in self._radix:
+            return False
+        if block.seg_tokens > self.capacity_tokens:
+            return False
+        self._evict_to_fit(block.seg_tokens, protect=block.path[:-1])
+        if self._used_tokens + block.seg_tokens > self.capacity_tokens:
+            return False
+        self._clock += 1
+        self._radix[block.path] = _Entry(block.block_id, block.seg_tokens,
+                                         self._clock)
+        self._used_tokens += block.seg_tokens
+        if len(block.path) > 1:
+            self._radix[block.path[:-1]].children += 1
+        return True
+
+    def _evict_to_fit(self, incoming_tokens: int, protect: PathKey) -> None:
+        """LRU-evict childless entries until ``incoming_tokens`` fits,
+        never touching prefixes of ``protect`` (the path being inserted).
+        Eviction order is the deterministic touch-serial order."""
+        protected = {protect[:k] for k in range(1, len(protect) + 1)}
+        while self._used_tokens + incoming_tokens > self.capacity_tokens:
+            victim_key = None
+            victim_touch = 0
+            for key, ent in self._radix.items():
+                if ent.children != 0 or key in protected:
+                    continue
+                if victim_key is None or ent.last_touch < victim_touch:
+                    victim_key, victim_touch = key, ent.last_touch
+            if victim_key is None:
+                return
+            ent = self._radix.pop(victim_key)
+            self._used_tokens -= ent.seg_tokens
+            if len(victim_key) > 1:
+                self._radix[victim_key[:-1]].children -= 1
+            self.evictions += 1

@@ -53,6 +53,8 @@ from repro.core.events import EventLoop
 from repro.core.goodput import GoodputSummary, RequestRecord, summarize
 from repro.core.power_manager import PowerManager
 from repro.core.power_model import PowerModel, get_power_model
+from repro.core.prefixcache import PrefixBlock, PrefixCache, PrefixCacheConfig
+from repro.core.tenancy import TenantRegistry
 
 RING_SLOTS = 32
 MAX_PREFILL_BATCH_TOKENS = 4096
@@ -211,6 +213,14 @@ class SimRequest:                    # by object in the in-flight tables
     # leaves the GPU — the same instants under both fidelities, so the
     # accumulated float sums match to the last bit.
     e_mark: float = 0.0
+    # prefix locality (core.prefixcache): the request's session path and
+    # per-level segment token counts; ``cached_tokens`` is set at prefill
+    # launch to the tokens actually served from the node's cache;
+    # ``carried_block`` is a detached cache leaf riding a KV migration
+    prefix_key: tuple = ()
+    prefix_tokens: tuple = ()
+    cached_tokens: int = 0
+    carried_block: Optional[PrefixBlock] = None
 
     @property
     def rid(self) -> int:
@@ -226,6 +236,8 @@ class SimRequest:                    # by object in the in-flight tables
         self.e_mark = 0.0
         self.decode_gpu = None
         self.rec.prefill_done = None
+        self.cached_tokens = 0
+        self.carried_block = None    # detached prefix KV dies with the rest
 
 
 class MacroPlan:
@@ -291,6 +303,9 @@ class Workload:
 
     def __init__(self, entries: List[tuple], name: str = "") -> None:
         # entries: (arrival, in_tokens, out_tokens, ttft_slo, tpot_slo)
+        # with two optional trailing fields for multi-tenant workloads:
+        # [5] tenant name, [6] (prefix_path, prefix_seg_tokens) — see
+        # ``build_request`` for the single decoding point
         self.entries = sorted(entries, key=lambda e: e[0])
         self.name = name
 
@@ -330,11 +345,45 @@ class Workload:
     @classmethod
     def uniform(cls, n: int, qps: float, in_tokens: int, out_tokens: int,
                 seed: int = 0, ttft_slo: float = 1.0,
-                tpot_slo: float = 0.040) -> "Workload":
+                tpot_slo: float = 0.040,
+                tenant: Optional[str] = None) -> "Workload":
         rng = np.random.default_rng(seed)
         t = cls.poisson_arrivals(n, qps, rng)
-        return cls([(float(tt), in_tokens, out_tokens, ttft_slo, tpot_slo)
-                    for tt in t], name="uniform")
+        if tenant is None:
+            return cls([(float(tt), in_tokens, out_tokens, ttft_slo,
+                         tpot_slo) for tt in t], name="uniform")
+        return cls([(float(tt), in_tokens, out_tokens, ttft_slo, tpot_slo,
+                     tenant) for tt in t], name=f"uniform:{tenant}")
+
+    @classmethod
+    def sessions(cls, n_sessions: int, turns: int, qps: float, tenant: str,
+                 seed: int = 0, system_tokens: int = 512,
+                 turn_tokens: int = 256, out_tokens: int = 128,
+                 think_s: float = 2.0, ttft_slo: float = 1.0,
+                 tpot_slo: float = 0.040) -> "Workload":
+        """Multi-turn agentic sessions: every turn re-sends the whole
+        conversation (shared system prompt + all prior turns), so turn k
+        carries ``system_tokens + (k+1)*turn_tokens`` input tokens of which
+        all but the newest turn are prefix-cacheable. Session starts are
+        Poisson at ``qps``; turns within a session are spaced by
+        exponential think times."""
+        rng = np.random.default_rng(seed)
+        starts = cls.poisson_arrivals(n_sessions, qps, rng)
+        think = rng.exponential(think_s, (n_sessions, turns))
+        entries: List[tuple] = []
+        for j in range(n_sessions):
+            t = float(starts[j])
+            path = ["sys:" + tenant]
+            segs = [system_tokens]
+            for k in range(turns):
+                if k:
+                    t = t + float(think[j, k])
+                path.append(f"s{j}.t{k}")
+                segs.append(turn_tokens)
+                entries.append((t, system_tokens + (k + 1) * turn_tokens,
+                                out_tokens, ttft_slo, tpot_slo, tenant,
+                                (tuple(path), tuple(segs))))
+        return cls(entries, name=f"sessions:{tenant}")
 
     @classmethod
     def phased_mix(cls, workloads: List["Workload"],
@@ -345,11 +394,30 @@ class Workload:
         entries, offset = [], 0.0
         for wl in workloads:
             last = 0.0
-            for (t, it, ot, ts, ps) in wl.entries:
-                entries.append((t + offset, it, ot, ts, ps))
-                last = max(last, t)
+            for e in wl.entries:
+                entries.append((e[0] + offset,) + tuple(e[1:]))
+                last = max(last, e[0])
             offset += last
         return cls(entries, name=name)
+
+
+def build_request(rid: int, entry: tuple) -> SimRequest:
+    """Construct a ``SimRequest`` (and its ``RequestRecord``) from one
+    workload entry — the single decoding point shared by the single-node
+    arrival seeder (``NodeSimulator.run``) and the cluster's
+    (``ClusterSimulator._seed_arrivals``). Entries are
+    ``(arrival, in_tokens, out_tokens, ttft_slo, tpot_slo)`` with optional
+    trailing tenant name and ``(prefix_path, prefix_seg_tokens)`` pair."""
+    t, it, ot, ts, ps = entry[:5]
+    tenant = entry[5] if len(entry) > 5 else "default"
+    rec = RequestRecord(rid, t, it, ot, ttft_slo=ts, tpot_slo=ps,
+                        tenant=tenant)
+    req = SimRequest(rec)
+    if len(entry) > 6 and entry[6] is not None:
+        path, segs = entry[6]
+        req.prefix_key = tuple(path)
+        req.prefix_tokens = tuple(int(s) for s in segs)
+    return req
 
 
 class NodeSimulator:
@@ -365,7 +433,9 @@ class NodeSimulator:
                  min_cap_w: Optional[float] = None,
                  max_cap_w: Optional[float] = None,
                  loop: Optional[EventLoop] = None, node_id: int = 0,
-                 fidelity: str = "macro", sanitize: Optional[bool] = None):
+                 fidelity: str = "macro", sanitize: Optional[bool] = None,
+                 cache_cfg: Optional[PrefixCacheConfig] = None,
+                 tenancy: Optional[TenantRegistry] = None):
         assert fidelity in ("macro", "iter"), fidelity
         self.fidelity = fidelity
         self._macro = fidelity == "macro"
@@ -393,6 +463,21 @@ class NodeSimulator:
         self.ctrl = (RapidController(ctrl_cfg, self.pm) if ctrl_cfg else None)
         self.ctrl_cfg = ctrl_cfg
         self.rng = np.random.default_rng(seed)
+        # multi-tenancy + session locality (core.tenancy, core.prefixcache):
+        # both default off, and every touch point below is None-gated, so
+        # single-stream runs keep their exact pre-tenancy event sequence
+        self.tenancy = tenancy
+        self.cache_cfg = cache_cfg
+        if cache_cfg is not None:
+            free = max(0.85 * gpu.hbm_bytes - self.cost.weight_bytes(), 0.0)
+            cap_toks = int(cache_cfg.frac * self.n_gpus * free
+                           / self.cost.kv_bytes_per_token())
+            self.prefix_cache: Optional[PrefixCache] = \
+                PrefixCache(node_id, cap_toks)
+        else:
+            self.prefix_cache = None
+        self.preempt_trace: List[tuple] = []  # (t, rid, gid, victim rids)
+        self.prefix_hit_tokens = 0            # cached tokens actually reused
 
         if loop is not None:
             # shared clock: the cluster layer owns the loop (and any
@@ -482,12 +567,35 @@ class NodeSimulator:
         gpu.busy = True
         gpu.inflight_prefill = batch
         cap = self.pm.effective[gpu.gid]
-        dt = self.cost.prefill_time(tokens, cap)
-        # batch energy attributed proportionally by prompt tokens (charged
-        # up front: if the node fails mid-batch the joules were still spent)
-        e_batch = self.cost.power.joules("prefill", cap, dt)
-        for req in batch:
-            req.rec.energy_j += e_batch * (req.rec.input_tokens / tokens)
+        if self.prefix_cache is None:
+            dt = self.cost.prefill_time(tokens, cap)
+            # batch energy attributed proportionally by prompt tokens
+            # (charged up front: if the node fails mid-batch the joules
+            # were still spent)
+            e_batch = self.cost.power.joules("prefill", cap, dt)
+            for req in batch:
+                req.rec.energy_j += e_batch * (req.rec.input_tokens / tokens)
+        else:
+            # session locality: each request prefills only the suffix its
+            # resident prefix doesn't cover (at least one token — the new
+            # turn always computes something). Lookup at batch launch is
+            # the instant the reuse is physically realized, and it touches
+            # LRU state, so macro/iter fire it at identical instants.
+            eff = 0
+            for req in batch:
+                cached = 0
+                if req.prefix_key:
+                    cached = min(self.prefix_cache.lookup(req.prefix_key),
+                                 req.rec.input_tokens - 1)
+                req.cached_tokens = cached
+                self.prefix_hit_tokens += cached
+                eff += req.rec.input_tokens - cached
+            eff = max(eff, 1)
+            dt = self.cost.prefill_time(eff, cap)
+            e_batch = self.cost.power.joules("prefill", cap, dt)
+            for req in batch:
+                req.rec.energy_j += e_batch * (
+                    (req.rec.input_tokens - req.cached_tokens) / eff)
         self._push(self.now + dt, "prefill_done", (gpu.gid, batch))
 
     def _on_prefill_done(self, gid: int, batch: List[SimRequest]):
@@ -505,6 +613,9 @@ class NodeSimulator:
         for req in batch:
             req.rec.prefill_done = self.now
             self.recent_ttft.append(self.now, req.rec.ttft)
+            if self.prefix_cache is not None and req.prefix_key:
+                # the KV this prefill just produced becomes reusable prefix
+                self.prefix_cache.insert(req.prefix_key, req.prefix_tokens)
             self._ring_enqueue(req)
         if gpu.draining:
             self._push(self.now + self._drain_s(), "drain_done", gid)
@@ -542,10 +653,13 @@ class NodeSimulator:
             return len(self.gpus[i].active) + len(self.gpus[i].pending_join)
         cap = self.cost.max_decode_batch(int(self._global_avg_ctx()))
         if not dgpus or min((load(i) for i in dgpus), default=cap) >= cap:
-            # decode pool saturated: request stays in its ring slot
-            # (backpressure on prefill, paper Section 3.3)
-            self._push(self.now + 0.02, "transfer_done", req)
-            return
+            if not self._maybe_preempt(req, dgpus):
+                # decode pool saturated: request stays in its ring slot
+                # (backpressure on prefill, paper Section 3.3)
+                self._push(self.now + 0.02, "transfer_done", req)
+                return
+            # a batch was evicted for this request: fall through to
+            # placement — ``load`` re-reads the now-freed GPU
         self._transfers.pop(req, None)
         self.ring_free += 1
         self._ring_pump()
@@ -554,6 +668,53 @@ class NodeSimulator:
         gpu = self.gpus[gid]
         gpu.pending_join.append(req)
         self._kick_decode(gpu)
+
+    def _maybe_preempt(self, req: SimRequest, dgpus: List[int]) -> bool:
+        """Priority preemption (core.tenancy): when the decode pool is
+        saturated, an arriving request whose tenant strictly out-ranks
+        EVERY member of some decode batch evicts that batch back through
+        the requeue path (fleet router when attached, else the local
+        prefill queue — never a silent drop) and takes the freed GPU.
+        Victim choice is deterministic: lowest batch-max priority, then
+        smallest batch, then lowest gid. The eviction reuses the exact
+        fold/truncate machinery of drain migrations, so macro and iter
+        fidelities preempt at the same instant with identical state."""
+        ten = self.tenancy
+        if ten is None or not ten.preempt or not dgpus:
+            return False
+        pri = ten.priority(req.rec.tenant)
+        best = None
+        for i in dgpus:
+            g = self.gpus[i]
+            members = g.active + g.pending_join
+            if not members:
+                continue
+            top = max(ten.priority(r.rec.tenant) for r in members)
+            if top >= pri:
+                continue
+            key = (top, len(members), i)
+            if best is None or key < best[0]:
+                best = (key, g)
+        if best is None:
+            return False
+        gpu = best[1]
+        victims = self.evict_decode_batch(gpu)
+        self.preempt_trace.append((self.now, req.rec.rid, gpu.gid,
+                                   tuple(v.rec.rid for v in victims)))
+        for v in victims:
+            # KV and generated tokens are dropped; spent joules stay billed
+            v.reset_for_requeue()
+        if self.migrator is not None:
+            # re-enters through router admission (which may shed it) —
+            # the sanitizer's no-silent-drop check tracks these rids
+            self.migrator(victims, self, False, "preempt")
+        else:
+            for v in victims:
+                self.q_prefill.append(v)
+                self.q_prefill_tokens += v.rec.input_tokens
+            for gid in self.prefill_gpus():
+                self._kick_prefill(self.gpus[gid])
+        return True
 
     def _global_avg_ctx(self) -> float:
         if not self._g_ctx_n:
@@ -1176,6 +1337,8 @@ class NodeSimulator:
         self._g_ctx_sum = 0
         self._g_ctx_n = 0
         self._next_due = math.inf
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()    # cached KV dies with the HBM
         self.defunct = True
         return reqs
 
@@ -1194,6 +1357,14 @@ class NodeSimulator:
                 int(self._global_avg_ctx())):
             return False
         self._register(req)
+        blk = req.carried_block
+        if blk is not None:
+            req.carried_block = None
+            if self.prefix_cache is not None:
+                # re-attach the migrated prefix leaf (only lands if its
+                # parent prefix is already resident here — else it's lost
+                # and the session's next turn recomputes it)
+                self.prefix_cache.adopt(blk)
         req.decode_gpu = gid
         gpu = self.gpus[gid]
         gpu.pending_join.append(req)
@@ -1335,6 +1506,8 @@ class NodeSimulator:
         assert not self.defunct and not self.leaving, \
             "submit() to a node that left the fleet"
         self._register(req)
+        if self.tenancy is not None:
+            self.tenancy.note_admit(req.rec.tenant)
         if self.coalesced:
             gpu = self.gpus[self.mixed_rr % self.n_gpus]
             self.mixed_rr += 1
@@ -1424,10 +1597,12 @@ class NodeSimulator:
         macro fidelity a horizon-truncated run may stop the clock slightly
         earlier than per-iteration fidelity — completed-request records are
         identical, but ``duration_s`` of unfinished tails can differ.)"""
-        for i, (t, it, ot, ts, ps) in enumerate(workload.entries):
-            rec = RequestRecord(i, t, it, ot, ttft_slo=ts, tpot_slo=ps)
-            self.records.append(rec)
-            self._push(t, "arrival", SimRequest(rec, preregistered=True))
+        for i, entry in enumerate(workload.entries):
+            req = build_request(i, entry)
+            req.preregistered = True
+            self.records.append(req.rec)
+            t = req.rec.arrival
+            self._push(t, "arrival", req)
         self.start()
         self.loop.run(lambda: self.n_unfinished() == 0, horizon_s)
         return self.summary()

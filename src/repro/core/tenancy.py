@@ -1,0 +1,104 @@
+"""Multi-tenant SLO classes: per-tenant targets, priorities, and quotas.
+
+RAPID's evaluation runs one anonymous request stream; production fleets
+serve *tenants* — an interactive agent product, a batch summarization
+pipeline, background evals — whose latency targets, business priorities,
+and admission weights differ by orders of magnitude. This module is the
+small, deliberately boring registry that makes tenants first-class:
+
+* ``TenantSpec`` — one tenant's SLO class: TTFT/TPOT targets, an integer
+  ``priority`` (higher preempts lower), and an admission ``weight`` that
+  scales the request's value density in the router's SLO-aware shedding
+  decision (``PowerAwareRouter._density``), so overload sheds background
+  evals before it sheds interactive traffic.
+* ``TenantRegistry`` — the lookup table every layer shares. Nodes consult
+  it to decide whether an arriving request may preempt a running decode
+  batch (``NodeSimulator._maybe_preempt``); the router consults it for
+  admission weights; ``goodput.summarize`` attributes goodput, joules,
+  dollars and grams of CO2 per tenant from the ``RequestRecord.tenant``
+  tag alone.
+
+The registry's tables (``_tenants``, ``_admitted``) are guarded by
+simcheck RC007 the same way PowerManager budgets are guarded by RC001:
+state may only change through the public API below, so per-tenant
+accounting can be audited at two call sites instead of everywhere.
+
+Determinism: the registry is a pure lookup table — no clocks, no
+randomness — so threading it through the simulator preserves the
+macro/iter bit-identity contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Tuple
+
+DEFAULT_TENANT = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's SLO class.
+
+    ``priority`` orders preemption (an arriving request may evict a
+    running decode batch whose every member has strictly lower priority);
+    ``weight`` scales the request's value density in SLO-aware admission,
+    so shedding under overload is priority-shaped too.
+    """
+    name: str
+    ttft_slo: float = 1.0
+    tpot_slo: float = 0.040
+    priority: int = 0
+    weight: float = 1.0
+
+
+class TenantRegistry:
+    """Shared tenant lookup table (node preemption, router admission,
+    per-tenant attribution).
+
+    ``preempt`` is the subsystem's policy switch: with it ``False`` the
+    priorities still shape admission weights and attribution, but no
+    decode batch is ever evicted — the ``no_preempt`` ablation arm of
+    ``benchmarks/fig15_multitenant.py``.
+    """
+
+    def __init__(self, specs: Iterable[TenantSpec] = (),
+                 preempt: bool = True):
+        self._tenants: Dict[str, TenantSpec] = {}
+        self._admitted: Dict[str, int] = {}
+        self.preempt = preempt
+        self._default = TenantSpec(DEFAULT_TENANT)
+        for spec in specs:
+            self.register(spec)
+
+    def register(self, spec: TenantSpec) -> None:
+        """Add (or replace) one tenant's SLO class."""
+        self._tenants[spec.name] = spec
+        self._admitted.setdefault(spec.name, 0)
+
+    def get(self, name: str) -> TenantSpec:
+        """The tenant's spec; unknown tenants resolve to the neutral
+        default class (priority 0, weight 1) so untagged traffic keeps
+        its pre-tenancy behaviour."""
+        return self._tenants.get(name, self._default)
+
+    def priority(self, name: str) -> int:
+        """Preemption priority of ``name`` (0 for unknown tenants)."""
+        return self.get(name).priority
+
+    def weight(self, name: str) -> float:
+        """Admission weight of ``name`` (1.0 for unknown tenants)."""
+        return self.get(name).weight
+
+    def note_admit(self, name: str) -> None:
+        """Count one admission against the tenant's quota ledger (the
+        RC007-guarded write path for per-tenant counters)."""
+        self._admitted[name] = self._admitted.get(name, 0) + 1
+
+    def admitted(self) -> Dict[str, int]:
+        """Per-tenant admission counts (a copy; the ledger itself only
+        changes through ``note_admit``)."""
+        return dict(self._admitted)
+
+    def names(self) -> Tuple[str, ...]:
+        """Registered tenant names, registration order."""
+        return tuple(self._tenants)

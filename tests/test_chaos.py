@@ -336,10 +336,10 @@ def test_deferred_requests_terminally_resolve():
 
 
 def test_value_density_orders_shedding():
-    r = PowerAwareRouter.__new__(PowerAwareRouter)
+    r = PowerAwareRouter()
     hi = SimRequest(RequestRecord(0, 0.0, 100, 900))     # decode-heavy
     lo = SimRequest(RequestRecord(1, 0.0, 8000, 16))     # prefill-heavy
-    assert PowerAwareRouter._density(hi) > PowerAwareRouter._density(lo)
+    assert r._density(hi) > r._density(lo)
 
 
 def test_shed_on_empty_queue_is_age_driven():
@@ -389,7 +389,7 @@ def test_value_density_ties_shed_deterministically():
     be deterministic — same seed, same shed set, bit-identical records."""
     hi = SimRequest(RequestRecord(0, 0.0, 512, 512))
     lo = SimRequest(RequestRecord(1, 0.0, 1024, 1024))
-    assert PowerAwareRouter._density(hi) == PowerAwareRouter._density(lo)
+    assert PowerAwareRouter()._density(hi) == PowerAwareRouter()._density(lo)
 
     def fp():
         cs = ClusterSimulator(CFG, policy_4p4d(500), 1,

@@ -299,3 +299,57 @@ def test_chaos_schedule_invariants(seed, frac, rack, n_links, retries):
     assert cs.n_unfinished() == 0
     for r in cs.records:
         assert (r.finish is not None) or (r.shed_t is not None)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenancy: random tenant mixes under priority preemption + affinity
+# routing + prefix caching keep power conservation, prefix-block
+# single-residency, and the no-silent-drop guarantee (sanitizer validates
+# every dispatch), and per-tenant attribution never loses a record
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 999),            # workload seed
+       st.integers(0, 3),              # high-priority tenant's priority edge
+       st.integers(2, 6),              # decode slots per GPU (saturation)
+       st.booleans())                  # preemption on vs off
+def test_tenant_mix_preemption_affinity_invariants(seed, pri, slots, preempt):
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core.cluster import ClusterSimulator
+    from repro.core.controller import policy_4p4d
+    from repro.core.costmodel import MI300X
+    from repro.core.prefixcache import PrefixCacheConfig
+    from repro.core.simulator import Workload
+    from repro.core.tenancy import TenantRegistry, TenantSpec
+
+    reg = TenantRegistry([TenantSpec("vip", priority=pri, weight=2.0),
+                          TenantSpec("batch", priority=0, weight=0.5)],
+                         preempt=preempt)
+    cs = ClusterSimulator(get_config("llama31_8b"), policy_4p4d(500), 2,
+                          node_budget_w=4000.0, seed=seed, sanitize=True,
+                          gpu=dataclasses.replace(MI300X,
+                                                  max_active_decode=slots),
+                          router_policy="affinity", tenancy=reg,
+                          cache_cfg=PrefixCacheConfig())
+    wl = Workload(
+        Workload.sessions(6, turns=3, qps=2.0, tenant="vip",
+                          seed=seed).entries
+        + Workload.uniform(18, qps=8.0, in_tokens=1536, out_tokens=256,
+                           seed=seed + 1, tenant="batch").entries)
+    # every dispatch validated: conservation, prefix-block residency,
+    # preempt no-silent-drop — a break anywhere raises inside the run
+    cs.run(wl)
+    assert cs.loop.sanitizer.checks > 0
+    cs.assert_facility_invariant()
+    assert cs.n_unfinished() == 0
+    # per-tenant attribution is a partition of the ledger
+    s = cs.summary()
+    by_tenant = {"vip": 0, "batch": 0}
+    for r in cs.records:
+        by_tenant[r.tenant] += 1
+    assert by_tenant["vip"] == s.per_tenant["vip"]["n_total"] == 18
+    assert by_tenant["batch"] == s.per_tenant["batch"]["n_total"] == 18
+    if not preempt:
+        assert all(not nd.preempt_trace for nd in cs.nodes)

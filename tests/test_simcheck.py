@@ -1,5 +1,5 @@
 """simcheck static pass: fixture-driven positive/negative tests for each
-rule (RC001-RC006), fingerprint stability under line moves, baseline
+rule (RC001-RC007), fingerprint stability under line moves, baseline
 round-trip/staleness, CLI exit codes, and the repo-tree-is-clean gate."""
 import textwrap
 from pathlib import Path
@@ -258,6 +258,72 @@ def test_rc006_allows_chaos_module_none_reset_and_non_core():
                 self.link_fault_fn = None
     """
     assert rc(declare, CORE, "RC006") == []      # declare/clear is legal
+
+
+# ---------------------------------------------------------------------------
+# RC007: prefix-cache / tenant state written only through the mutation API
+# ---------------------------------------------------------------------------
+
+PFX = Path("src/repro/core/prefixcache.py")
+TEN = Path("src/repro/core/tenancy.py")
+
+
+def test_rc007_flags_cache_state_writes_outside_api():
+    fs = rc("""
+        def warm(node, key) -> None:
+            node.prefix_cache._radix[key] = None
+            node.prefix_cache._used_tokens = 0
+    """, CORE, "RC007")
+    assert len(fs) == 2
+    assert all(f.severity is Severity.ERROR for f in fs)
+    assert "PrefixCache" in fs[0].message
+
+
+def test_rc007_flags_tenant_and_delete_writes():
+    fs = rc("""
+        def reset(reg, name) -> None:
+            reg._admitted[name] = 0
+            del reg._tenants[name]
+    """, OUT, "RC007")
+    assert len(fs) == 2
+    assert "TenantRegistry" in fs[0].message
+
+
+def test_rc007_flags_non_writer_method_inside_the_class():
+    # a read-side helper may not mutate the radix
+    fs = rc("""
+        class PrefixCache:
+            def match_tokens(self, path: tuple) -> int:
+                self._clock += 1
+                return 0
+    """, PFX, "RC007")
+    assert len(fs) == 1
+
+
+def test_rc007_allows_the_mutation_api():
+    cache_ok = """
+        class PrefixCache:
+            def __init__(self) -> None:
+                self._radix = {}
+                self._used_tokens = 0
+            def insert(self, path: tuple, segs: tuple) -> None:
+                self._radix[path] = segs
+                self._used_tokens += 1
+            def pop_leaf(self, path: tuple) -> None:
+                del self._radix[path]
+            def _evict_to_fit(self, n: int) -> None:
+                self._used_tokens -= n
+    """
+    assert rc(cache_ok, PFX, "RC007") == []
+    reg_ok = """
+        class TenantRegistry:
+            def __init__(self) -> None:
+                self._tenants = {}
+                self._admitted = {}
+            def note_admit(self, name: str) -> None:
+                self._admitted[name] = self._admitted.get(name, 0) + 1
+    """
+    assert rc(reg_ok, TEN, "RC007") == []
 
 
 # ---------------------------------------------------------------------------
